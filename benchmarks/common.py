@@ -1,0 +1,60 @@
+"""Shared helpers for the per-figure benchmarks.
+
+Every benchmark accepts ``--scale {smoke,paper}``: smoke sizes finish on
+CPU in seconds-to-minutes (used by benchmarks.run and CI); paper sizes
+match the publication settings (hours on real hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def parser(name: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(name)
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def save(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[{name}] results -> {path}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+
+def table(rows: list[dict], cols: list[str], title: str = ""):
+    if title:
+        print(f"\n== {title} ==")
+    widths = {c: max(len(c), max((len(_fmt(r.get(c))) for r in rows), default=0))
+              for c in cols}
+    print("  ".join(c.rjust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).rjust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0 or (1e-3 < abs(v) < 1e5):
+            return f"{v:.4g}"
+        return f"{v:.3e}"
+    return str(v)

@@ -1,0 +1,73 @@
+"""Paper Fig. 10: energy per 500-iteration MLE, SBV vs exact GP.
+
+No power meters on CPU, so energy is DERIVED from the roofline step time
+(dry-run terms where available, analytic complexity otherwise) times chip
+power draw. The paper's comparison is reproduced structurally:
+
+* SBV, 500 iterations over n points: roofline time/iter x 500 x chip W.
+* Exact GP, ONE Cholesky iteration at n=122,880 (the [10]-reference point):
+  n^3/3 FLOPs at peak x chip W — the paper reports >140 kJ per iteration
+  on A100; SBV's FULL 500-iteration MLE on 16x larger data uses a
+  fraction of that.
+"""
+from __future__ import annotations
+
+from repro.analysis.hlo_analysis import DEFAULT_HW
+
+from .common import parser, save, table
+
+CHIP_W = 250.0          # representative accelerator draw under load (W)
+EXACT_N = 122_880       # reference exact-GP size from [10]
+
+
+def sbv_iter_seconds(n, bs, m):
+    bc = n // bs
+    flops = bc * (m ** 3 / 3 + bs ** 3 / 3 + m * m * bs + m * bs * bs)
+    byts = bc * (m * m + m * bs + bs * bs) * 8 * 3
+    return max(flops / DEFAULT_HW.peak_flops, byts / DEFAULT_HW.hbm_bw)
+
+
+def main(argv=None):
+    ap = parser("fig10")
+    ap.parse_args(argv)
+
+    rows = []
+    for n, label in ((2_000_000, "2M (A100-class run)"),
+                     (5_000_000, "5M (GH200-class run)")):
+        for m in (100, 200, 400):
+            t = sbv_iter_seconds(n, 100, m)
+            rows.append({
+                "workload": f"SBV {label}", "m_est": m,
+                "s/iter": t, "iters": 500,
+                "energy_kJ": 500 * t * CHIP_W / 1e3,
+            })
+
+    # exact GP single iteration (dense FP64 Cholesky), the [10] reference.
+    # Roofline-ideal lower bound on the target chip (fp32-class peak; the
+    # chip has no fp64 pipe — exact GP pays conversion/emulation on top):
+    t_exact = (EXACT_N ** 3 / 3) / (DEFAULT_HW.peak_flops / 4)
+    mem_exact = EXACT_N ** 2 * 8 * 3 / DEFAULT_HW.hbm_bw
+    t_exact = max(t_exact, mem_exact)
+    rows.append({"workload": f"exact GP n={EXACT_N} (roofline ideal)",
+                 "m_est": None, "s/iter": t_exact, "iters": 1,
+                 "energy_kJ": t_exact * CHIP_W / 1e3})
+    # the paper's MEASURED reference: >140 kJ per MLE iteration (A100, [10])
+    rows.append({"workload": f"exact GP n={EXACT_N} (paper-measured A100)",
+                 "m_est": None, "s/iter": None, "iters": 1,
+                 "energy_kJ": 140.0})
+
+    table(rows, ["workload", "m_est", "s/iter", "iters", "energy_kJ"],
+          "Fig. 10: derived energy (roofline x chip power)")
+    save("fig10_energy", {"rows": rows, "chip_w": CHIP_W})
+
+    sbv_full = max(r["energy_kJ"] for r in rows if r["iters"] == 500)
+    ratio = sbv_full / 140.0
+    print(f"[fig10] full 500-iter SBV MLE (largest m) vs ONE paper-measured "
+          f"exact-GP iteration: {ratio:.2f}x — paper reports 0.12-0.40x; "
+          "an entire SBV fit costs a fraction of one exact iteration")
+    assert ratio < 0.5, ratio
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 6: estimated input relevance (1/beta_i) on satellite drag.
+
+The drag surrogate is built so dims {pitch, acc1, acc2} dominate; a correct
+fit recovers large 1/beta there and ~0 for the inert extra dim.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fit import fit_sbv
+from repro.core.pipeline import SBVConfig
+from repro.data.gp_sim import satellite_drag_like
+
+from .common import parser, save, table
+
+DIMS = ["vel", "t_srf", "t_atm", "yaw", "pitch", "acc1", "acc2", "extra"]
+
+
+def main(argv=None):
+    ap = parser("fig6")
+    args = ap.parse_args(argv)
+    n = 4_000 if args.scale == "smoke" else 200_000
+    x, y = satellite_drag_like(args.seed, n)
+    y = y - y.mean()
+
+    rows = []
+    for name, bs, m in (("SV", 1, 20), ("SBV", 10, 40)):
+        cfg = SBVConfig(n_blocks=max(1, n // bs), m=m, seed=args.seed)
+        res = fit_sbv(x, y, cfg, inner_steps=40, outer_rounds=2)
+        rel = 1.0 / np.asarray(res.params.beta)
+        rows.append({"model": name, **{d: float(r) for d, r in zip(DIMS, rel)}})
+
+    table(rows, ["model"] + DIMS, "Fig. 6: input relevance 1/beta")
+    save("fig6_relevance", {"rows": rows})
+
+    for r in rows:
+        strong = np.array([r["pitch"], r["acc1"], r["acc2"]])
+        weak = np.array([r["extra"]])
+        assert strong.min() > 2.0 * weak.max(), (
+            f"{r['model']}: dominant dims should out-rank the inert dim: {r}")
+    print("[fig6] dominant-dimension recovery: OK")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Render EXPERIMENTS.md-ready tables from dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--json FILE] [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_row(v: dict) -> str:
+    mfu = v["roofline_fraction"] * 100
+    return (
+        f"| {v['arch']:<18s} | {v['shape']:<11s} | {v['t_compute']*1e3:9.2f} "
+        f"| {v['t_memory']*1e3:9.2f} | {v['t_collective']*1e3:9.2f} "
+        f"| {v['bottleneck']:<10s} | {v['useful_ratio']*100:5.1f}% | {mfu:5.2f}% "
+        f"| {v['peak_memory']/2**30:6.2f} |"
+    )
+
+
+HEADER = (
+    "| arch               | shape       | comp (ms) | mem (ms)  | coll (ms) "
+    "| bottleneck | useful | MFU*  | peak GiB |\n"
+    "|--------------------|-------------|-----------|-----------|-----------"
+    "|------------|--------|-------|----------|"
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.json")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        results = json.load(f)
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    for mesh in meshes:
+        rows = [v for v in results.values()
+                if v.get("mesh") == mesh and "error" not in v]
+        rows.sort(key=lambda v: (v["arch"], v["shape"]))
+        print(f"\n### Mesh: {mesh} ({rows[0]['n_devices'] if rows else '?'} chips)\n")
+        print(HEADER)
+        for v in rows:
+            print(fmt_row(v))
+    skipped = [v for v in results.values() if "skipped" in v]
+    if skipped:
+        print("\nSkipped cells (documented in DESIGN.md §4):")
+        for v in skipped:
+            print(f"* {v['arch']} x {v['shape']}: {v['skipped']}")
+
+
+if __name__ == "__main__":
+    main()

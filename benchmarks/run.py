@@ -1,0 +1,49 @@
+"""Run every paper benchmark at smoke scale: ``python -m benchmarks.run``.
+
+One module per paper table/figure (DESIGN.md §6). Each benchmark runs in
+its OWN subprocess: several need a specific virtual-device count set
+before jax initializes (fig9's 8-worker mesh), and isolation keeps one
+module's jax state and CPU load from skewing another's measurements.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+MODULES = [
+    "fig4_kl_mspe",
+    "fig5_satdrag",
+    "fig6_relevance",
+    "fig7_metarvm",
+    "fig8_single_node",
+    "fig9_scaling",
+    "fig10_energy",
+    "table2_complexity",
+    "ablation_structure",
+]
+
+
+def main() -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    failures = []
+    for name in MODULES:
+        print(f"\n{'='*72}\n  benchmarks.{name}\n{'='*72}", flush=True)
+        t0 = time.time()
+        r = subprocess.run([sys.executable, "-m", f"benchmarks.{name}"],
+                           cwd=root, env=env)
+        status = "OK" if r.returncode == 0 else "FAILED"
+        if r.returncode != 0:
+            failures.append(name)
+        print(f"[run] {name}: {status} ({time.time()-t0:.1f}s)", flush=True)
+    print(f"\n[run] {len(MODULES) - len(failures)}/{len(MODULES)} benchmarks OK")
+    if failures:
+        print("[run] FAILED:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

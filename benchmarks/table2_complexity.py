@@ -1,0 +1,83 @@
+"""Paper Table 2: measured complexity scaling of SV vs SBV.
+
+Fits power laws to MEASURED per-iteration FLOPs (from the compiled HLO of
+the batched likelihood via the trip-count-aware cost model) as m grows
+with bs = m/4 (the paper's recommended ratio):
+
+    SV  compute O(n m^3)   memory O(n m^2)
+    SBV compute O(n m^2)   memory O(n m)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo_cost import CostModel
+from repro.core.kernels_math import KernelParams
+from repro.core.vecchia import batched_block_loglik
+
+from .common import parser, save, table
+
+
+def measure(n, bs, m, d=10):
+    bc = max(1, n // bs)
+    f = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    args = (
+        KernelParams.create(sigma2=1.0, beta=np.full(d, 0.5), nugget=1e-4, d=d),
+        jax.ShapeDtypeStruct((bc, bs, d), f), jax.ShapeDtypeStruct((bc, bs), f),
+        jax.ShapeDtypeStruct((bc, bs), jnp.bool_),
+        jax.ShapeDtypeStruct((bc, m, d), f), jax.ShapeDtypeStruct((bc, m), f),
+        jax.ShapeDtypeStruct((bc, m), jnp.bool_),
+    )
+    fn = lambda p, bx, by, bm, nx, ny, nm: batched_block_loglik(
+        p, bx, by, bm, nx, ny, nm, nu=3.5)
+    compiled = jax.jit(fn).lower(*args).compile()
+    cm = CostModel(compiled.as_text())
+    return cm.flops(), cm.bytes_accessed()
+
+
+def fit_power(ms, vals):
+    """exponent p in vals ~ C * m^p."""
+    lm, lv = np.log(ms), np.log(vals)
+    return float(np.polyfit(lm, lv, 1)[0])
+
+
+def main(argv=None):
+    ap = parser("table2")
+    args = ap.parse_args(argv)
+    n = 20_000 if args.scale == "smoke" else 500_000
+    ms = (16, 32, 64) if args.scale == "smoke" else (100, 200, 400)
+
+    rows = []
+    series = {"SV": {"flops": [], "bytes": []}, "SBV": {"flops": [], "bytes": []}}
+    for m in ms:
+        for name, bs in (("SV", 1), ("SBV", max(1, m // 4))):
+            fl, by = measure(n, bs, m)
+            series[name]["flops"].append(fl)
+            series[name]["bytes"].append(by)
+            rows.append({"method": name, "m": m, "bs": bs,
+                         "GFLOP/iter": fl / 1e9, "GB/iter": by / 1e9})
+    table(rows, ["method", "m", "bs", "GFLOP/iter", "GB/iter"],
+          "Table 2: measured cost scaling (fixed n)")
+
+    exps = {}
+    for name in ("SV", "SBV"):
+        exps[name] = {
+            "flops_exp": fit_power(ms, series[name]["flops"]),
+            "bytes_exp": fit_power(ms, series[name]["bytes"]),
+        }
+        print(f"[table2] {name}: FLOPs ~ m^{exps[name]['flops_exp']:.2f}, "
+              f"bytes ~ m^{exps[name]['bytes_exp']:.2f}")
+    save("table2_complexity", {"rows": rows, "exponents": exps, "n": n})
+
+    assert exps["SV"]["flops_exp"] > exps["SBV"]["flops_exp"] + 0.5, (
+        "SV compute should scale ~one power of m worse than SBV", exps)
+    assert exps["SV"]["bytes_exp"] > exps["SBV"]["bytes_exp"] + 0.5, (
+        "SV memory should scale ~one power of m worse than SBV", exps)
+    print("[table2] complexity separation (Table 2): OK")
+    return exps
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Distributed SBV across 8 virtual workers + checkpointed MLE restart.
+
+Demonstrates the production posture on CPU stand-in devices:
+* blocks sharded by owner over a 'workers' mesh (the paper's MPI ranks),
+* one scalar psum per iteration (audited from the compiled HLO),
+* optimizer-state checkpointing -> kill -> elastic restore on a
+  DIFFERENT worker count.
+
+    PYTHONPATH=src python examples/distributed_fit.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from repro.analysis.hlo_cost import CostModel
+from repro.core import SBVConfig, preprocess
+from repro.core.distributed import distributed_neg_loglik_fn
+from repro.core.kernels_math import KernelParams
+from repro.ckpt import save_checkpoint, restore_train_state
+from repro.data.gp_sim import paper_synthetic
+from repro.launch.mesh import make_worker_mesh
+from repro.optim import adam_init, adam_update
+
+N, BS, M = 6_000, 20, 32
+
+x, y, true_params = paper_synthetic(seed=0, n=N)
+params = KernelParams.create(sigma2=float(np.var(y)), beta=0.5, nugget=1e-3,
+                             d=x.shape[1])
+
+# --- phase 1: 8 workers -------------------------------------------------
+mesh8 = make_worker_mesh(8)
+cfg = SBVConfig(n_blocks=N // BS, m=M, n_workers=8, seed=0)
+packed, _ = preprocess(x, y, np.asarray(params.beta), cfg)
+loss8 = distributed_neg_loglik_fn(packed, 3.5, mesh8, "workers")
+
+cm = CostModel(loss8.lower(params).compile().as_text(), n_devices=8)
+coll = cm.collective_bytes()
+print(f"hot-path collectives on 8 workers: {coll['counts']}, "
+      f"{coll['total']:.0f} wire bytes/iter — the paper's single MPI_Allreduce")
+
+import jax
+
+grad8 = jax.jit(jax.value_and_grad(loss8))
+state = adam_init(params)
+for it in range(15):
+    loss_v, g = grad8(params)
+    params, state = adam_update(g, state, params, 0.05)
+print(f"after 15 steps on 8 workers: nll/n = {float(loss_v):.4f}")
+
+ckpt_path = save_checkpoint("/tmp/sbv_ckpt", 15, {"params": params, "opt": state})
+print(f"checkpointed -> {ckpt_path}")
+
+# --- phase 2: elastic restart on 4 workers ------------------------------
+mesh4 = make_worker_mesh(4)
+cfg4 = SBVConfig(n_blocks=N // BS, m=M, n_workers=4, seed=0)
+packed4, _ = preprocess(x, y, np.asarray(params.beta), cfg4)
+loss4 = distributed_neg_loglik_fn(packed4, 3.5, mesh4, "workers")
+
+restored, manifest = restore_train_state(
+    ckpt_path, {"params": params, "opt": state})
+params, state = restored["params"], restored["opt"]
+print(f"restored step-{manifest['step']} state onto a 4-worker mesh (elastic)")
+
+grad4 = jax.jit(jax.value_and_grad(loss4))
+for it in range(15):
+    loss_v, g = grad4(params)
+    params, state = adam_update(g, state, params, 0.05)
+print(f"after 15 more steps on 4 workers: nll/n = {float(loss_v):.4f}")
+print("relevance 1/beta:", np.round(1 / np.asarray(params.beta), 2),
+      "(dims 0-1 should dominate)")

@@ -1,0 +1,70 @@
+"""End-to-end emulator driver (paper §6.3): MetaRVM -> SBV surrogate.
+
+Runs the full pipeline the paper describes: sample simulator inputs,
+run the compartmental epidemic model, fit a distributed SBV GP, validate
+held-out predictions, and report per-parameter relevance.
+
+    PYTHONPATH=src python examples/emulate_metarvm.py [--n 20000] [--workers 4]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import SBVConfig
+from repro.core.fit import fit_sbv
+from repro.core.predict import predict_sbv, rmspe
+from repro.data.gp_sim import METARVM_BOUNDS, metarvm_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--m-est", type=int, default=40)
+    ap.add_argument("--m-pred", type=int, default=80)
+    args = ap.parse_args()
+
+    print(f"[1/4] simulating {args.n} MetaRVM runs (100-day epidemic each)...")
+    t0 = time.time()
+    x, y = metarvm_dataset(seed=0, n=args.n)
+    print(f"      {time.time()-t0:.1f}s; output mean-normalized hospitalizations")
+
+    n_test = args.n // 10
+    x_tr, y_tr = x[:-n_test], y[:-n_test]
+    x_te, y_te = x[-n_test:], y[-n_test:]
+    mu = y_tr.mean()
+
+    print(f"[2/4] fitting SBV GP (bs=100-geometry, m_est={args.m_est}, "
+          f"P={args.workers})...")
+    distributed = None
+    if args.workers > 1:
+        from repro.launch.mesh import make_worker_mesh
+
+        distributed = (make_worker_mesh(args.workers), "workers")
+    cfg = SBVConfig(n_blocks=max(1, len(y_tr) // 100), m=args.m_est,
+                    n_workers=args.workers, seed=0)
+    t0 = time.time()
+    res = fit_sbv(x_tr, y_tr - mu, cfg, inner_steps=40, outer_rounds=2,
+                  distributed=distributed, verbose=True)
+    print(f"      fit in {time.time()-t0:.1f}s")
+
+    print(f"[3/4] predicting {n_test} held-out runs (bs_pred=25, "
+          f"m_pred={args.m_pred})...")
+    pred = predict_sbv(res.params, x_tr, y_tr - mu, x_te,
+                       bs_pred=25, m_pred=args.m_pred)
+    err = rmspe(pred.mean + mu, y_te)
+    cover = float(np.mean((y_te - mu >= pred.ci_low) & (y_te - mu <= pred.ci_high)))
+    print(f"      RMSPE {err:.2f}%   95% CI coverage {cover:.1%}")
+
+    print("[4/4] parameter relevance (1/beta, paper Fig. 7b):")
+    rel = 1.0 / np.asarray(res.params.beta)
+    for name, r in sorted(zip(METARVM_BOUNDS, rel), key=lambda t: -t[1]):
+        bar = "#" * int(40 * r / rel.max())
+        print(f"      {name:>3s} {r:8.3f} {bar}")
+    print("      (dh and dr should rank last — they don't drive "
+          "cumulative admissions)")
+
+
+if __name__ == "__main__":
+    main()

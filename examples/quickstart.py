@@ -1,0 +1,32 @@
+"""Quickstart: fit a Scaled Block Vecchia GP in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import SBVConfig
+from repro.core.fit import fit_sbv
+from repro.core.predict import predict_sbv
+from repro.data.gp_sim import paper_synthetic
+
+# 1. Data: 10-d anisotropic GP draw (only dims 0-1 matter; paper §6.1).
+x, y, true_params = paper_synthetic(seed=0, n=5_000)
+x_train, y_train = x[:4_500], y[:4_500]
+x_test, y_test = x[4_500:], y[4_500:]
+
+# 2. Configure: ~90 blocks of ~50 points, 40 nearest neighbors per block.
+cfg = SBVConfig(n_blocks=90, m=40, seed=0)
+
+# 3. Fit by gradient MLE. The Scaled-Vecchia alternation rebuilds the
+#    block/neighbor structure with the current anisotropy every round.
+result = fit_sbv(x_train, y_train, cfg, inner_steps=100, outer_rounds=3,
+                 lr=0.1, verbose=True)
+print("estimated relevance 1/beta:", np.round(1 / np.asarray(result.params.beta), 2))
+print("true relevance        :", np.round(1 / np.array([0.05, 0.05] + [5.0] * 8), 2))
+
+# 4. Predict with conditional simulation (mean, variance, 95% CI).
+pred = predict_sbv(result.params, x_train, y_train, x_test, bs_pred=5, m_pred=80)
+mspe = float(np.mean((pred.mean - y_test) ** 2))
+cover = float(np.mean((y_test >= pred.ci_low) & (y_test <= pred.ci_high)))
+print(f"MSPE {mspe:.4f} (var(y)={y.var():.3f});  95% CI coverage {cover:.1%}")
+assert mspe < 0.5 * y.var(), "GP should beat the mean predictor comfortably"

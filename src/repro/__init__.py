@@ -1,0 +1,11 @@
+"""repro: Scaled Block Vecchia (SBV) GP emulation framework in JAX.
+
+GP numerics want fp64 on the host path (the paper runs MAGMA d-routines);
+the LM zoo uses explicit fp32/bf16 dtypes throughout, so enabling x64
+globally is safe for both sides.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+from .hlo_analysis import (
+    HW,
+    CellReport,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+    roofline,
+)

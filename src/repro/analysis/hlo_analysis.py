@@ -1,0 +1,255 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step on the
+TARGET hardware (TPU v5e-class constants from the assignment):
+
+    compute    = HLO_FLOPs_per_device   / peak_FLOPs          (197 TF bf16)
+    memory     = HLO_bytes_per_device   / HBM_bw              (819 GB/s)
+    collective = wire_bytes_per_device  / ICI_link_bw         (50 GB/s/link)
+
+``compiled.cost_analysis()`` runs on the POST-SPMD module, so its flops /
+bytes are already per-device. Collective bytes are parsed from the
+optimized HLO text: XLA prints each collective's RESULT shape and replica
+groups; per-device wire bytes use the standard ring model
+
+    all-gather       (g-1)/g * result_bytes        (receives all but own shard)
+    all-reduce       2 (g-1)/g * result_bytes      (reduce-scatter + all-gather)
+    reduce-scatter   (g-1) * result_bytes          (operand = g * result)
+    all-to-all       (g-1)/g * result_bytes
+    collective-permute  result_bytes
+
+The dominant term is the bottleneck the perf loop iterates on; the
+"useful-compute" ratio MODEL_FLOPS / (flops_per_device * chips) catches
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class HW:
+    """Per-chip peak numbers (TPU v5e-class, from the assignment)."""
+
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # bytes/s
+    ici_bw: float = 50e9            # bytes/s per link
+    hbm_bytes: float = 16e9         # capacity (v5e 16 GB)
+
+
+DEFAULT_HW = HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# e.g.  %all-gather.3 = f32[4096,512]{1,0} all-gather(%x), ... replica_groups=[16,32]<=...
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of one shape or tuple-of-shapes literal."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0]
+        return max(1, first.count(",") + 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes by collective kind (ring model, see module doc)."""
+    out = {k: 0.0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        op = m.group(2)
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            wire = result_bytes * (g - 1) / g
+        elif op == "all-reduce":
+            wire = 2.0 * result_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = result_bytes * (g - 1)          # operand = g * result
+        elif op == "all-to-all":
+            wire = result_bytes * (g - 1) / g
+        else:  # collective-permute
+            wire = result_bytes
+        out[op] += wire
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs per step: 6*N*D (dense) / 6*N_active*D (MoE),
+    N = non-embedding params, D = processed tokens. Decode steps process
+    global_batch tokens; train processes batch*seq and costs 3x forward."""
+    from repro.launch.param_count import active_param_count
+
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks
+    toks = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * toks
+
+
+@dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_detail: dict
+    peak_memory: float
+    arg_bytes: float
+    temp_bytes: float
+    model_flops: float = 0.0
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / DEFAULT_HW.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / DEFAULT_HW.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / DEFAULT_HW.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_step(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        hlo_total = self.flops_per_dev * self.n_devices
+        return self.model_flops / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS / (chips * peak * t_step): the MFU the compiled graph
+        could reach if it hit the dominant roofline exactly."""
+        denom = self.n_devices * DEFAULT_HW.peak_flops * self.t_step
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_detail": {k: v for k, v in self.coll_detail.items()},
+            "peak_memory": self.peak_memory,
+            "arg_bytes": self.arg_bytes,
+            "temp_bytes": self.temp_bytes,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "t_step": self.t_step,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "extra": self.extra,
+        }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     n_devices: int, mflops: float = 0.0) -> CellReport:
+    """Derive the three roofline terms from the compiled artifact.
+
+    FLOPs/bytes/collectives come from the trip-count-aware text cost model
+    (repro.analysis.hlo_cost) because ``compiled.cost_analysis()`` counts
+    while-loop bodies once; the XLA numbers are kept in ``extra`` for
+    reference.
+    """
+    from repro.analysis.hlo_cost import CostModel
+
+    txt = compiled.as_text()
+    cm = CostModel(txt, n_devices=n_devices)
+    flops = cm.flops()
+    byts = cm.bytes_accessed()
+    coll = cm.collective_bytes()
+    cost = compiled.cost_analysis()
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(ma.peak_memory_in_bytes)
+        argb = float(ma.argument_size_in_bytes)
+        temp = float(ma.temp_size_in_bytes)
+    except Exception:  # backend without memory analysis
+        peak = argb = temp = float("nan")
+    rep = CellReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_dev=flops, bytes_per_dev=byts,
+        coll_bytes_per_dev=coll["total"], coll_detail=coll,
+        peak_memory=peak, arg_bytes=argb, temp_bytes=temp,
+        model_flops=mflops,
+    )
+    rep.extra = {
+        "xla_flops_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_once": float(cost.get("bytes accessed", 0.0)),
+    }
+    return rep
+
+
+def roofline(report: CellReport) -> str:
+    """One-paragraph summary line for EXPERIMENTS.md tables."""
+    r = report
+    return (
+        f"{r.arch:>20s} {r.shape:>12s} {r.mesh:>9s} | "
+        f"comp {r.t_compute*1e3:9.3f}ms  mem {r.t_memory*1e3:9.3f}ms  "
+        f"coll {r.t_collective*1e3:9.3f}ms | {r.bottleneck:10s} | "
+        f"useful {r.useful_ratio*100:5.1f}%  roofline-MFU {r.roofline_fraction*100:5.1f}%"
+    )

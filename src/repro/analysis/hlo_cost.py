@@ -1,0 +1,538 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, so a
+scan-over-layers transformer is undercounted by ~L x (verified empirically:
+flops of an 8-step scan == flops of a 1-step scan). This module re-derives
+FLOPs / HBM bytes / collective wire bytes by parsing the post-SPMD HLO
+text, building the computation call graph, and multiplying each
+computation's costs by its loop trip count:
+
+* while bodies/conditions: trip count = the integer constant in the loop
+  condition computation (jax scans lower to 0..L counters; the max int
+  constant in the condition is the bound);
+* fusion interiors contribute FLOPs (elementwise work inside the fusion)
+  but no HBM bytes (only the fusion's boundary operands/results move);
+* dots: 2 * result_elems * contraction_size (operand shapes resolved from
+  the per-computation symbol table);
+* LAPACK custom-calls (the GP cells): potrf = B n^3/3, trsm = B n^2 k;
+* collectives use the ring model (see hlo_analysis) x trip multiplier.
+
+All counts are per-device: the text is the post-partitioning module.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLEE_RE = re.compile(r"(calls|condition|body|to_apply|true_computation|"
+                        r"false_computation)=%([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((-?\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_WINDOW_SIZE_RE = re.compile(r"window=\{[^}]*size=([0-9x]+)")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+_CCTARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exp", "log", "tanh", "sqrt", "rsqrt", "power",
+    "and", "or", "xor", "not", "compare", "select", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "cosine", "sine",
+    "logistic", "exponential-minus-one", "log-plus-one", "remainder",
+    "atan2", "is-finite", "cbrt", "tan", "erf", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "stochastic-convert",
+}
+_ZERO_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "opt-barrier", "partition-id", "replica-id", "custom-call-start",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shapes(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(x) for x in dims.split(",") if x]))
+    return out
+
+
+def _bytes_of(text: str) -> float:
+    return float(sum(_DTYPE_BYTES[dt] * math.prod(dims) for dt, dims in _shapes(text)))
+
+
+def _elems_of(text: str) -> float:
+    return float(sum(math.prod(dims) for _, dims in _shapes(text)))
+
+
+@dataclass
+class Instr:
+    name: str
+    rtype: str        # result type text
+    opcode: str
+    operands: list[str]
+    rest: str         # attribute tail of the line
+    payload: str = "" # raw args text (constant values live here)
+
+
+@dataclass
+class Computation:
+    name: str
+    entry: bool = False
+    instrs: list[Instr] = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # instr name -> rtype text
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = ""
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(name=m.group(2), entry=bool(m.group(1)))
+                if cur.entry:
+                    entry_name = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, tail = m.groups()
+        depth = 0
+        args_end = len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args_end = i
+                    break
+                depth -= 1
+        args = tail[:args_end]
+        rest = tail[args_end + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", args)
+        ins = Instr(name=name, rtype=rtype, opcode=opcode, operands=operands,
+                    rest=rest, payload=args)
+        cur.instrs.append(ins)
+        cur.symbols[name] = rtype
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry_name
+
+
+class CostModel:
+    def __init__(self, text: str, n_devices: int = 1):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self._mult = self._multipliers()
+
+    # ----------------------------------------------------------- graph ----
+    def _multipliers(self) -> dict:
+        mult = defaultdict(float)
+        mult[self.entry] = 1.0
+        order = [self.entry]
+        seen = {self.entry}
+        # BFS over call graph
+        i = 0
+        while i < len(order):
+            cname = order[i]
+            i += 1
+            comp = self.comps.get(cname)
+            if comp is None:
+                continue
+            m = mult[cname]
+            for ins in comp.instrs:
+                callees = _CALLEE_RE.findall(ins.rest)
+                branches = _BRANCHES_RE.search(ins.rest)
+                factor = 1.0
+                if ins.opcode == "while":
+                    cond_name = dict(callees).get("condition")
+                    cond = self.comps.get(cond_name)
+                    factor = float(self._comp_const_bound(cond)) if cond else 1.0
+                for kind, callee in callees:
+                    f = factor if ins.opcode == "while" else 1.0
+                    mult[callee] += m * f
+                    if callee not in seen:
+                        seen.add(callee)
+                        order.append(callee)
+                if branches:
+                    for bname in re.findall(r"%([\w\.\-]+)", branches.group(1)):
+                        mult[bname] += m
+                        if bname not in seen:
+                            seen.add(bname)
+                            order.append(bname)
+        return mult
+
+    def _comp_const_bound(self, comp: Computation) -> int:
+        """Loop trip count = largest positive int constant in the condition
+        computation (jax scan conditions compare a 0-based counter < L)."""
+        vals = [1]
+        for ins in comp.instrs:
+            if ins.opcode == "constant":
+                m = re.match(r"^\s*(-?\d+)\s*$", ins.payload)
+                if m:
+                    vals.append(int(m.group(1)))
+        return max(vals)
+
+    # --------------------------------------------------- fusion interior ----
+    def _boundary(self) -> set:
+        """Computations whose instructions MOVE HBM bytes (entry + loop
+        bodies/conds + branches) — i.e. not fusion/reduce interiors."""
+        interior = set()
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                for kind, callee in _CALLEE_RE.findall(ins.rest):
+                    if kind in ("calls", "to_apply"):
+                        interior.add(callee)
+        return set(self.comps) - interior
+
+    # ------------------------------------------------------------ costs ----
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems = _elems_of(ins.rtype)
+        m = _CONTRACT_RE.search(ins.rest)
+        contraction = 1.0
+        if m and ins.operands:
+            lhs = comp.symbols.get(ins.operands[0], "")
+            sh = _shapes(lhs)
+            if sh:
+                dims = sh[0][1]
+                for di in m.group(1).split(","):
+                    if di and int(di) < len(dims):
+                        contraction *= dims[int(di)]
+        return 2.0 * out_elems * contraction
+
+    def _conv_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems = _elems_of(ins.rtype)
+        wm = _WINDOW_SIZE_RE.search(ins.rest)
+        window = 1.0
+        if wm:
+            for t in wm.group(1).split("x"):
+                window *= int(t)
+        fgc = int(_FGC_RE.search(ins.rest).group(1)) if _FGC_RE.search(ins.rest) else 1
+        in_feat = 1.0
+        if ins.operands:
+            sh = _shapes(comp.symbols.get(ins.operands[0], ""))
+            if sh:
+                # feature dim unknown without dim_labels; assume depthwise
+                # unless fgc == 1 and input rank >= 3 (then use last dim).
+                dims = sh[0][1]
+                if fgc == 1 and len(dims) >= 3:
+                    in_feat = dims[-1]
+        return 2.0 * out_elems * window * (in_feat / fgc if fgc else 1.0)
+
+    def _custom_call_flops(self, comp: Computation, ins: Instr) -> float:
+        tgt = _CCTARGET_RE.search(ins.rest)
+        t = tgt.group(1) if tgt else ""
+        shapes = [_shapes(comp.symbols.get(o, "")) for o in ins.operands]
+        if "potrf" in t and shapes and shapes[0]:
+            dims = shapes[0][0][1]
+            n = dims[-1]
+            b = math.prod(dims[:-2]) if len(dims) > 2 else 1
+            return b * n ** 3 / 3.0
+        if "trsm" in t and len(shapes) >= 2 and shapes[0] and shapes[1]:
+            a = shapes[0][0][1]
+            bsh = shapes[1][0][1]
+            n = a[-1]
+            k = bsh[-1]
+            b = math.prod(a[:-2]) if len(a) > 2 else 1
+            return b * n * n * k
+        if ("getrf" in t or "geqrf" in t) and shapes and shapes[0]:
+            dims = shapes[0][0][1]
+            n = dims[-1]
+            b = math.prod(dims[:-2]) if len(dims) > 2 else 1
+            return 2.0 * b * n ** 3 / 3.0
+        return 0.0
+
+    def flops(self) -> float:
+        total = 0.0
+        for comp in self.comps.values():
+            m = self._mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode == "dot":
+                    total += m * self._dot_flops(comp, ins)
+                elif ins.opcode == "convolution":
+                    total += m * self._conv_flops(comp, ins)
+                elif ins.opcode == "custom-call":
+                    total += m * self._custom_call_flops(comp, ins)
+                elif ins.opcode in _ELEMENTWISE:
+                    total += m * _elems_of(ins.rtype)
+                elif ins.opcode in ("reduce", "reduce-window"):
+                    op_b = sum(_elems_of(comp.symbols.get(o, "")) for o in ins.operands[:1])
+                    total += m * op_b
+        return total
+
+    def flops_split(self) -> dict:
+        """{'mxu': dot/conv/solver flops, 'vpu': elementwise+reduce flops}."""
+        mxu = vpu = 0.0
+        for comp in self.comps.values():
+            m = self._mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode == "dot":
+                    mxu += m * self._dot_flops(comp, ins)
+                elif ins.opcode == "convolution":
+                    mxu += m * self._conv_flops(comp, ins)
+                elif ins.opcode == "custom-call":
+                    mxu += m * self._custom_call_flops(comp, ins)
+                elif ins.opcode in _ELEMENTWISE:
+                    vpu += m * _elems_of(ins.rtype)
+                elif ins.opcode in ("reduce", "reduce-window"):
+                    vpu += m * sum(_elems_of(comp.symbols.get(o, ""))
+                                   for o in ins.operands[:1])
+        return {"mxu": mxu, "vpu": vpu}
+
+    def top_bytes(self, k: int = 20) -> list:
+        """Top-k (bytes x multiplier, opcode, instr, comp) — profiler view."""
+        rows = []
+        boundary = self._boundary()
+        for cname in boundary:
+            comp = self.comps[cname]
+            m = self._mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode in _ZERO_BYTES_OPS:
+                    continue
+                b = self._instr_bytes(comp, ins)
+                if b:
+                    rows.append((m * b, ins.opcode, ins.name, cname, m))
+        rows.sort(reverse=True)
+        return rows[:k]
+
+    def _instr_bytes(self, comp: Computation, ins: Instr) -> float:
+        rb = _bytes_of(ins.rtype)
+        if ins.opcode == "dynamic-slice":
+            return 2.0 * rb
+        if ins.opcode == "dynamic-update-slice":
+            upd = _bytes_of(comp.symbols.get(ins.operands[1], "")) if len(ins.operands) > 1 else rb
+            return 2.0 * upd
+        if ins.opcode == "gather":
+            return 2.0 * rb
+        if ins.opcode == "scatter":
+            upd = _bytes_of(comp.symbols.get(ins.operands[-1], "")) if ins.operands else rb
+            return 2.0 * upd
+        if ins.opcode in ("broadcast", "iota", "rng", "rng-bit-generator"):
+            return rb
+        if ins.opcode == "fusion":
+            return self._fusion_bytes(comp, ins, rb)
+        ob = sum(_bytes_of(comp.symbols.get(o, "")) for o in ins.operands)
+        return rb + ob
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr, rb: float) -> float:
+        """Fusion traffic with slice/update awareness.
+
+        Scan stacking (fwd residual saves) fuses a dynamic-update-slice
+        whose RESULT is the whole (L, ...) buffer but whose real traffic
+        is the updated slice (the buffer aliases in place); the backward
+        reads back through in-fusion dynamic-slices. Charging full
+        buffer/operand sizes over-counts every scan-based model by ~L x.
+        Rules:
+          * root DUS (possibly behind bitcasts): result = 2 x update size,
+            and the aliased buffer operand is free;
+          * an operand consumed ONLY by (dynamic-)slice ops inside the
+            fusion is charged at the slices' result sizes;
+          * everything else: full size.
+        """
+        m = re.search(r"calls=%([\w\.\-]+)", ins.rest)
+        callee = self.comps.get(m.group(1)) if m else None
+        if callee is None:
+            return rb + sum(_bytes_of(comp.symbols.get(o, "")) for o in ins.operands)
+
+        # param index -> param instr name; uses map inside the callee
+        params: dict[int, str] = {}
+        uses: dict[str, list[Instr]] = {}
+        for fi in callee.instrs:
+            if fi.opcode == "parameter":
+                pm = re.match(r"^\s*(\d+)\s*$", fi.payload)
+                if pm:
+                    params[int(pm.group(1))] = fi.name
+            for o in fi.operands:
+                uses.setdefault(o, []).append(fi)
+
+        def _through_bitcast(name: str) -> Instr | None:
+            cur = callee.symbols.get(name) and name
+            seen = 0
+            while cur is not None and seen < 8:
+                instr = next((i for i in callee.instrs if i.name == cur), None)
+                if instr is None:
+                    return None
+                if instr.opcode in ("bitcast", "copy", "reshape", "transpose"):
+                    cur = instr.operands[0] if instr.operands else None
+                    seen += 1
+                    continue
+                return instr
+            return None
+
+        root = callee.instrs[-1] if callee.instrs else None
+        aliased_param = None
+        total = rb
+        if root is not None:
+            r_eff = _through_bitcast(root.name) or root
+            if r_eff.opcode == "dynamic-update-slice" and len(r_eff.operands) > 1:
+                upd = _bytes_of(callee.symbols.get(r_eff.operands[1], ""))
+                total = 2.0 * upd
+                buf = _through_bitcast(r_eff.operands[0])
+                if buf is not None and buf.opcode == "parameter":
+                    aliased_param = buf.name
+
+        for idx, opname in enumerate(ins.operands):
+            pname = params.get(idx)
+            if pname is None:
+                total += _bytes_of(comp.symbols.get(opname, ""))
+                continue
+            if pname == aliased_param:
+                continue
+            consumers = uses.get(pname, [])
+            slice_like = [c for c in consumers
+                          if c.opcode in ("dynamic-slice", "slice")]
+            if consumers and len(slice_like) == len(consumers):
+                total += sum(_bytes_of(c.rtype) for c in slice_like)
+            else:
+                total += _bytes_of(comp.symbols.get(opname, ""))
+        return total
+
+    def bytes_accessed(self) -> float:
+        total = 0.0
+        for cname in self._boundary():
+            comp = self.comps[cname]
+            m = self._mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode in _ZERO_BYTES_OPS:
+                    continue
+                total += m * self._instr_bytes(comp, ins)
+        return total
+
+    def fused_bytes_estimate(self) -> float:
+        """HBM bytes under a TPU-like fusion assumption.
+
+        The CPU backend materializes elementwise chains as separate kLoop
+        fusions; the TPU backend fuses producer->consumer elementwise ops
+        into one pass. For every single-use edge between two elementwise/
+        fusion instructions in the same computation we drop the
+        intermediate's write+read (2 x result bytes). Reported alongside
+        the raw count; used uniformly for baseline and optimized variants.
+        """
+        total = self.bytes_accessed()
+        fusable = _ELEMENTWISE | {"fusion", "broadcast", "reduce", "convert",
+                                  "copy", "transpose", "reshape"}
+        for cname in self._boundary():
+            comp = self.comps[cname]
+            m = self._mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            # use counts within this computation
+            uses: dict[str, int] = {}
+            consumers: dict[str, str] = {}
+            for ins in comp.instrs:
+                for o in ins.operands:
+                    uses[o] = uses.get(o, 0) + 1
+                    consumers[o] = ins.opcode
+            for ins in comp.instrs:
+                if ins.opcode not in fusable or ins.opcode in _ZERO_BYTES_OPS:
+                    continue
+                if uses.get(ins.name) == 1 and consumers.get(ins.name) in fusable:
+                    total -= m * 2.0 * _bytes_of(ins.rtype)
+        return max(total, 0.0)
+
+    def collective_bytes(self) -> dict:
+        out = {k: 0.0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        for comp in self.comps.values():
+            m = self._mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                op = ins.opcode.replace("-start", "")
+                if op not in _COLLECTIVES or ins.opcode.endswith("-done"):
+                    continue
+                rb = _bytes_of(ins.rtype)
+                g = self._group_size(ins.rest)
+                if g <= 1:
+                    continue
+                if op == "all-gather":
+                    wire = rb * (g - 1) / g
+                elif op == "all-reduce":
+                    wire = 2.0 * rb * (g - 1) / g
+                elif op == "reduce-scatter":
+                    wire = rb * (g - 1)
+                elif op == "all-to-all":
+                    wire = rb * (g - 1) / g
+                else:
+                    wire = rb
+                out[op] += m * wire
+                counts[op] += 1
+        out["total"] = sum(out[k] for k in _COLLECTIVES)
+        out["counts"] = counts
+        return out
+
+    def top_collectives(self, k: int = 15) -> list:
+        """Top-k (wire bytes x mult, kind, group size, instr, comp)."""
+        rows = []
+        for comp in self.comps.values():
+            m = self._mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                op = ins.opcode.replace("-start", "")
+                if op not in _COLLECTIVES or ins.opcode.endswith("-done"):
+                    continue
+                rb = _bytes_of(ins.rtype)
+                g = self._group_size(ins.rest)
+                if g <= 1:
+                    continue
+                if op == "all-gather":
+                    wire = rb * (g - 1) / g
+                elif op == "all-reduce":
+                    wire = 2.0 * rb * (g - 1) / g
+                elif op == "reduce-scatter":
+                    wire = rb * (g - 1)
+                elif op == "all-to-all":
+                    wire = rb * (g - 1) / g
+                else:
+                    wire = rb
+                rows.append((m * wire, op, g, ins.name, comp.name, m))
+        rows.sort(reverse=True)
+        return rows[:k]
+
+    def _group_size(self, rest: str) -> int:
+        m = _GROUPS_RE.search(rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST_RE.search(rest)
+        if m:
+            first = m.group(1).split("},{")[0]
+            return max(1, first.count(",") + 1)
+        return self.n_devices

@@ -1,0 +1,6 @@
+from .checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    restore_train_state,
+    save_checkpoint,
+)

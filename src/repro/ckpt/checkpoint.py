@@ -1,0 +1,231 @@
+"""Checkpoint / restart for 1000+-node posture (DESIGN.md §5).
+
+Design:
+* A checkpoint = a directory ``step_<n>/`` holding one ``manifest.json``
+  plus one ``.npz`` shard per (host, pytree-chunk). Parameters are stored
+  in CANONICAL (unsharded, name-keyed) layout, so restore works onto a
+  different mesh/host count than the save — this is what makes restarts
+  ELASTIC (scale the job up or down and resume).
+* Writes are atomic: shards land in ``step_<n>.tmp/`` and the directory is
+  renamed only after the manifest is fsync'd. A crash mid-save never
+  corrupts the latest complete checkpoint.
+* ``CheckpointManager`` adds async (background-thread) saves — the train
+  loop hands off host copies and keeps stepping — keep-last-k GC, and a
+  SIGTERM handler for preemption-safe final saves.
+* Data-iterator state (and any other JSON-serializable extras) ride in the
+  manifest so restore resumes the exact stream position.
+
+On a real multi-host fleet each host writes only the shards it owns
+(``host_shards(params, host_id, n_hosts)``); this single-process build
+exercises the same code path with n_hosts=1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree, prefix=""):
+    """Flatten a pytree-of-dicts/NamedTuples into {dotted-name: leaf}."""
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}."))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    """Rebuild ``template``'s structure with leaves taken from ``flat``."""
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat, f"{prefix}{k}.") for k in template}
+    if hasattr(template, "_fields"):
+        return type(template)(
+            *[_unflatten_into(getattr(template, k), flat, f"{prefix}{k}.") for k in template._fields]
+        )
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat, f"{prefix}{i}.") for i, v in enumerate(template)
+        )
+    name = prefix[:-1]
+    leaf = flat[name]
+    want_dtype = template.dtype if hasattr(template, "dtype") else None
+    if want_dtype is not None and leaf.dtype != want_dtype:
+        leaf = leaf.astype(want_dtype)
+    return leaf
+
+
+def save_checkpoint(directory: str, step: int, state, extras: dict | None = None,
+                    host_id: int = 0, n_hosts: int = 1) -> str:
+    """Atomic synchronous save. Returns the final checkpoint path."""
+    flat = _flatten(state)
+    names = sorted(flat)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp{host_id}"
+    os.makedirs(tmp, exist_ok=True)
+
+    # Each host owns a contiguous slice of the name list (canonical layout).
+    mine = names[host_id::n_hosts]
+    shard = {}
+    for name in mine:
+        leaf = flat[name]
+        arr = np.asarray(jax.device_get(leaf))
+        # bf16 has no numpy dtype — store as uint16 bit pattern.
+        if arr.dtype == jax.numpy.bfloat16:
+            shard[name] = arr.view(np.uint16)
+            shard["__bf16__" + name] = np.array(1)
+        else:
+            shard[name] = arr
+    np.savez(os.path.join(tmp, f"shard_{host_id:05d}.npz"), **shard)
+
+    if host_id == 0:
+        manifest = {
+            "step": step,
+            "names": names,
+            "n_hosts": n_hosts,
+            "extras": extras or {},
+            "time": time.time(),
+        }
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+    # single-host rename; on a fleet host 0 renames after a barrier
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def load_checkpoint(path: str) -> tuple[dict, dict]:
+    """Returns (flat name->np.ndarray, manifest dict)."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    flat = {}
+    for fn in sorted(os.listdir(path)):
+        if not fn.endswith(".npz"):
+            continue
+        with np.load(os.path.join(path, fn)) as z:
+            for name in z.files:
+                if name.startswith("__bf16__"):
+                    continue
+                arr = z[name]
+                if "__bf16__" + name in z.files:
+                    arr = arr.view(jax.numpy.bfloat16)
+                flat[name] = arr
+    missing = set(manifest["names"]) - set(flat)
+    if missing:
+        raise IOError(f"checkpoint {path} missing leaves: {sorted(missing)[:5]}...")
+    return flat, manifest
+
+
+def restore_train_state(path: str, template, shardings=None):
+    """Rebuild ``template``-structured state from ``path``.
+
+    ``shardings`` (optional pytree of NamedSharding) re-shards onto the
+    CURRENT mesh — which may differ from the saving mesh (elastic restart).
+    """
+    flat, manifest = load_checkpoint(path)
+    state = _unflatten_into(template, flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda leaf, s: jax.device_put(leaf, s) if s is not None else jax.numpy.asarray(leaf),
+            state, shardings,
+        )
+    else:
+        state = jax.tree.map(jax.numpy.asarray, state)
+    return state, manifest
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [d for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp0")
+             and os.path.exists(os.path.join(directory, d, _MANIFEST))]
+    if not steps:
+        return None
+    return os.path.join(directory, max(steps))
+
+
+class CheckpointManager:
+    """Async double-buffered saves + keep-last-k GC + SIGTERM drain.
+
+    ``save()`` snapshots device arrays to host (blocking only for the copy),
+    then writes on a background thread; at most one write is in flight —
+    a second save waits (double buffering). ``close()`` drains the queue.
+    """
+
+    def __init__(self, directory: str, keep: int = 3, install_sigterm: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        os.makedirs(directory, exist_ok=True)
+        if install_sigterm:
+            self._prev_handler = signal.signal(signal.SIGTERM, self._on_sigterm)
+        self._last_state_fn = None
+
+    # -- preemption ---------------------------------------------------
+    def _on_sigterm(self, signum, frame):
+        self.close()
+        if self._last_state_fn is not None:
+            step, state, extras = self._last_state_fn()
+            save_checkpoint(self.directory, step, state, extras)
+        raise SystemExit(143)
+
+    def register_state_provider(self, fn):
+        """fn() -> (step, state, extras); called on SIGTERM for a final save."""
+        self._last_state_fn = fn
+
+    # -- async save ---------------------------------------------------
+    def save(self, step: int, state, extras: dict | None = None, block: bool = False):
+        host_state = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), state)
+        self.wait()  # double buffer: at most one outstanding write
+
+        def write():
+            save_checkpoint(self.directory, step, host_state, extras)
+            self._gc()
+
+        if block:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+
+    def close(self):
+        self.wait()
+
+    def _gc(self):
+        steps = sorted(
+            d for d in os.listdir(self.directory)
+            if d.startswith("step_") and ".tmp" not in d
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    def latest(self) -> str | None:
+        return latest_checkpoint(self.directory)

@@ -1,0 +1,14 @@
+# The paper's primary contribution: the Scaled Block Vecchia GP.
+from .kernels_math import KernelParams, cov_matrix, matern, scaled_sqdist
+from .exact_gp import exact_loglik, exact_predict
+from .pipeline import SBVConfig, preprocess
+from .vecchia import batched_block_loglik, packed_loglik
+from .kl import kl_divergence
+
+__all__ = [
+    "KernelParams", "cov_matrix", "matern", "scaled_sqdist",
+    "exact_loglik", "exact_predict",
+    "SBVConfig", "preprocess",
+    "batched_block_loglik", "packed_loglik",
+    "kl_divergence",
+]

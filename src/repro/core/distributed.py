@@ -1,0 +1,97 @@
+"""Distributed SBV likelihood via shard_map (paper Alg. 1 steps 4-5).
+
+Worker p's blocks live on shard p of the mesh axis; each shard computes its
+batched local likelihood and a single scalar ``psum`` replaces the paper's
+MPI_Allreduce — communication per optimization iteration is O(1) scalars,
+the property that makes SBV scale near-linearly (paper Fig. 9).
+
+Host-side preprocessing already grouped blocks by owner (Alg. 2's
+MPI_Alltoall locality), so sharding the packed arrays on the leading block
+axis IS the paper's data distribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .kernels_math import KernelParams
+from .packing import PackedBlocks
+from .vecchia import batched_block_loglik
+
+
+def shard_blocks_by_owner(packed: PackedBlocks, n_workers: int) -> PackedBlocks:
+    """Reorder blocks so each worker's blocks are contiguous, then pad the
+    block count to a multiple of n_workers with fully-masked dummy blocks
+    (identity padding => zero likelihood contribution)."""
+    order = np.argsort(packed.owners, kind="stable")
+    def g(a):
+        return a[order]
+    packed = PackedBlocks(
+        blk_x=g(packed.blk_x), blk_y=g(packed.blk_y), blk_mask=g(packed.blk_mask),
+        nn_x=g(packed.nn_x), nn_y=g(packed.nn_y), nn_mask=g(packed.nn_mask),
+        owners=g(packed.owners),
+    )
+    bc = packed.n_blocks
+    target = ((bc + n_workers - 1) // n_workers) * n_workers
+    if target != bc:
+        packed = packed.pad_to_blocks(target)
+    # Round-robin interleave is NOT used: contiguous-by-owner matches the
+    # paper's locality. But padding must land per-worker; with quantile
+    # partitioning worker loads are near-equal so tail padding suffices.
+    return packed
+
+
+def distributed_loglik(
+    params: KernelParams,
+    packed: PackedBlocks,
+    mesh: Mesh,
+    axis: str = "workers",
+    nu: float = 3.5,
+):
+    """Total log-likelihood with blocks sharded over ``axis`` of ``mesh``."""
+    spec = P(axis)
+    sharding = NamedSharding(mesh, spec)
+    arrs = [
+        jnp.asarray(a)
+        for a in (packed.blk_x, packed.blk_y, packed.blk_mask,
+                  packed.nn_x, packed.nn_y, packed.nn_mask)
+    ]
+    arrs = [jax.device_put(a, sharding) for a in arrs]
+
+    def local(p, bx, by, bm, nx, ny, nm):
+        ll = batched_block_loglik(p, bx, by, bm, nx, ny, nm, nu=nu)
+        return jax.lax.psum(ll, axis)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), spec, spec, spec, spec, spec, spec),
+        out_specs=P(),
+    )
+    return jax.jit(fn)(params, *arrs)
+
+
+def distributed_neg_loglik_fn(packed, nu, mesh, axis="workers"):
+    """Loss closure for fit_sbv(distributed=(mesh, axis))."""
+    n_workers = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
+    packed = shard_blocks_by_owner(packed, n_workers)
+    spec = P(axis)
+    sharding = NamedSharding(mesh, spec)
+    arrs = [
+        jax.device_put(jnp.asarray(a), sharding)
+        for a in (packed.blk_x, packed.blk_y, packed.blk_mask,
+                  packed.nn_x, packed.nn_y, packed.nn_mask)
+    ]
+    n = packed.n_points
+
+    local = lambda p, bx, by, bm, nx, ny, nm: jax.lax.psum(
+        batched_block_loglik(p, bx, by, bm, nx, ny, nm, nu=nu), axis
+    )
+    fn = shard_map(local, mesh=mesh, in_specs=(P(),) + (spec,) * 6, out_specs=P())
+
+    def loss(params):
+        return -fn(params, *arrs) / n
+
+    return jax.jit(loss)

@@ -1,0 +1,122 @@
+"""Scaled anisotropic Matérn kernels (paper Eq. 5/6), differentiable in JAX.
+
+The paper parameterizes the covariance as
+
+    K_theta(x, x') = sigma^2 * matern_nu(r) + nugget * 1{x == x'},
+    r^2 = sum_i ((x_i - x'_i) / beta_i)^2,
+
+with half-integer smoothness nu (all paper experiments use nu = 3.5).
+Half-integer Matérn has a closed form exp(-r) * poly(r), which is what we
+evaluate on device — no Bessel functions in the hot path (hardware
+adaptation; scipy's general-nu Bessel form is used as a test oracle).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_NU = (0.5, 1.5, 2.5, 3.5)
+
+
+class KernelParams(NamedTuple):
+    """Unconstrained (log-space) kernel parameters: theta of the paper."""
+
+    log_sigma2: jax.Array  # process variance, scalar
+    log_beta: jax.Array    # per-dimension ranges, shape (d,)
+    log_nugget: jax.Array  # noise variance sigma_0^2, scalar
+
+    @property
+    def sigma2(self):
+        return jnp.exp(self.log_sigma2)
+
+    @property
+    def beta(self):
+        return jnp.exp(self.log_beta)
+
+    @property
+    def nugget(self):
+        return jnp.exp(self.log_nugget)
+
+    @staticmethod
+    def create(sigma2=1.0, beta=1.0, nugget=1e-8, d=None):
+        beta = jnp.atleast_1d(jnp.asarray(beta, dtype=jnp.float64))
+        if d is not None and beta.shape[0] == 1:
+            beta = jnp.full((d,), beta[0])
+        return KernelParams(
+            log_sigma2=jnp.log(jnp.asarray(sigma2, dtype=jnp.float64)),
+            log_beta=jnp.log(beta),
+            log_nugget=jnp.log(jnp.asarray(nugget, dtype=jnp.float64)),
+        )
+
+
+def matern(r: jax.Array, nu: float) -> jax.Array:
+    """Normalized half-integer Matérn correlation: 2^{1-nu}/Gamma(nu) r^nu K_nu(r).
+
+    Closed forms (nu = p + 1/2):
+        nu=0.5: exp(-r)
+        nu=1.5: (1 + r) exp(-r)
+        nu=2.5: (1 + r + r^2/3) exp(-r)
+        nu=3.5: (1 + r + 2 r^2 / 5 + r^3 / 15) exp(-r)
+    """
+    if nu == 0.5:
+        poly = 1.0
+    elif nu == 1.5:
+        poly = 1.0 + r
+    elif nu == 2.5:
+        poly = 1.0 + r + r * r / 3.0
+    elif nu == 3.5:
+        poly = 1.0 + r + 0.4 * (r * r) + (r * r * r) / 15.0
+    else:  # pragma: no cover - guarded by SUPPORTED_NU
+        raise ValueError(f"nu={nu} not in supported half-integer set {SUPPORTED_NU}")
+    return poly * jnp.exp(-r)
+
+
+def scaled_sqdist(x1: jax.Array, x2: jax.Array, beta: jax.Array) -> jax.Array:
+    """Pairwise squared scaled distance. x1 (n1,d), x2 (n2,d) -> (n1,n2)."""
+    z1 = x1 / beta
+    z2 = x2 / beta
+    d2 = (
+        jnp.sum(z1 * z1, axis=-1)[:, None]
+        + jnp.sum(z2 * z2, axis=-1)[None, :]
+        - 2.0 * z1 @ z2.T
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+def cov_matrix(
+    x1: jax.Array,
+    x2: jax.Array,
+    params: KernelParams,
+    nu: float = 3.5,
+    add_nugget: bool = False,
+) -> jax.Array:
+    """Scaled Matérn covariance between two point sets (paper Eq. 5/6).
+
+    ``add_nugget`` adds nugget * I and must only be used when x1 is x2.
+    """
+    d2 = scaled_sqdist(x1, x2, params.beta)
+    # sqrt is non-differentiable at 0; the tiny floor keeps intermediate
+    # gradients finite. dd2/dparams == 0 on the diagonal so the chain rule
+    # still yields exactly 0 there.
+    r = jnp.sqrt(d2 + 1e-300)
+    k = params.sigma2 * matern(r, nu)
+    if add_nugget:
+        n = x1.shape[0]
+        k = k + params.nugget * jnp.eye(n, dtype=k.dtype)
+    return k
+
+
+def matern_scipy_oracle(r, nu):
+    """General-nu Matérn via scipy Bessel K (host-only test oracle)."""
+    import numpy as np
+    from scipy.special import gamma, kv
+
+    r = np.asarray(r, dtype=np.float64)
+    out = np.where(
+        r == 0.0,
+        1.0,
+        2.0 ** (1.0 - nu) / gamma(nu) * np.power(r, nu) * kv(nu, r),
+    )
+    return out

@@ -1,0 +1,38 @@
+"""KL divergence between exact GP and a Vecchia approximation (paper Eq. 4).
+
+For zero-mean Gaussians, D_KL(exact || vecchia) reduces to the difference
+of log-likelihoods evaluated at y = 0:
+    D_KL = l_exact(theta; 0) - l_vecchia(theta; 0) >= 0.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .exact_gp import exact_loglik
+from .kernels_math import KernelParams
+from .packing import PackedBlocks
+from .vecchia import packed_loglik
+
+
+def kl_divergence(
+    params: KernelParams,
+    x: np.ndarray,
+    packed: PackedBlocks,
+    nu: float = 3.5,
+    backend: str = "ref",
+) -> float:
+    """Eq. 4. ``packed`` must have been built from the same x (y ignored)."""
+    import jax.numpy as jnp
+
+    zero_packed = PackedBlocks(
+        blk_x=packed.blk_x,
+        blk_y=np.zeros_like(packed.blk_y),
+        blk_mask=packed.blk_mask,
+        nn_x=packed.nn_x,
+        nn_y=np.zeros_like(packed.nn_y),
+        nn_mask=packed.nn_mask,
+        owners=packed.owners,
+    )
+    l0 = exact_loglik(params, jnp.asarray(x), jnp.zeros(x.shape[0]), nu=nu)
+    la = packed_loglik(params, zero_packed, nu=nu, backend=backend)
+    return float(l0 - la)

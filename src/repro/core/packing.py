@@ -1,0 +1,104 @@
+"""Pack irregular blocks + neighbor sets into fixed-size padded arrays.
+
+MAGMA (the paper's GPU backend) supports variable-size batched BLAS; the
+TPU MXU wants fixed tiles. We pad every block to ``bs_max`` rows and every
+neighbor set to ``m`` rows and carry boolean masks. The likelihood kernel
+applies *identity padding*: padded rows/cols of each covariance get a unit
+diagonal and zero off-diagonals, padded observations are zero, and only
+real points contribute the -0.5*log(2*pi) constant — provably (and
+test-verifiably) leaving the likelihood unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .blocks import BlockStructure
+
+
+@dataclass
+class PackedBlocks:
+    """Device-ready SoA layout. All arrays leading dim = bc (block count).
+
+    Coordinates are stored RAW (unscaled): the scaling parameters beta live
+    in the kernel parameters so that gradients flow through them. The
+    preprocessing-time beta only shapes the block/neighbor structure.
+    """
+
+    blk_x: np.ndarray    # (bc, bs_max, d)
+    blk_y: np.ndarray    # (bc, bs_max)
+    blk_mask: np.ndarray  # (bc, bs_max) bool
+    nn_x: np.ndarray     # (bc, m, d)
+    nn_y: np.ndarray     # (bc, m)
+    nn_mask: np.ndarray  # (bc, m) bool
+    owners: np.ndarray   # (bc,) worker id per block
+
+    @property
+    def n_blocks(self) -> int:
+        return self.blk_x.shape[0]
+
+    @property
+    def bs_max(self) -> int:
+        return self.blk_x.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.nn_x.shape[1]
+
+    @property
+    def n_points(self) -> int:
+        return int(self.blk_mask.sum())
+
+    def pad_to_blocks(self, bc_target: int) -> "PackedBlocks":
+        """Append fully-masked dummy blocks (for even sharding)."""
+        extra = bc_target - self.n_blocks
+        if extra <= 0:
+            return self
+        z = lambda a: np.concatenate(
+            [a, np.zeros((extra,) + a.shape[1:], dtype=a.dtype)], axis=0
+        )
+        return PackedBlocks(
+            blk_x=z(self.blk_x), blk_y=z(self.blk_y), blk_mask=z(self.blk_mask),
+            nn_x=z(self.nn_x), nn_y=z(self.nn_y), nn_mask=z(self.nn_mask),
+            owners=z(self.owners),
+        )
+
+
+def pack_blocks(
+    x_raw: np.ndarray,
+    y: np.ndarray,
+    blocks: BlockStructure,
+    neighbors: list[np.ndarray],
+    m: int,
+    bs_max: int | None = None,
+    dtype=np.float64,
+) -> PackedBlocks:
+    """Pack (x, y, block structure, neighbor lists) into padded arrays,
+    ordered by conditioning rank (block 0 of the output = first block)."""
+    bc = blocks.n_blocks
+    d = x_raw.shape[1]
+    if bs_max is None:
+        bs_max = max(mb.size for mb in blocks.members)
+
+    blk_x = np.zeros((bc, bs_max, d), dtype=dtype)
+    blk_y = np.zeros((bc, bs_max), dtype=dtype)
+    blk_mask = np.zeros((bc, bs_max), dtype=bool)
+    nn_x = np.zeros((bc, m, d), dtype=dtype)
+    nn_y = np.zeros((bc, m), dtype=dtype)
+    nn_mask = np.zeros((bc, m), dtype=bool)
+    owners = np.zeros(bc, dtype=np.int32)
+
+    for rank, b in enumerate(blocks.order):
+        mb = blocks.members[b]
+        if mb.size > bs_max:
+            raise ValueError(f"block {b} size {mb.size} > bs_max {bs_max}")
+        blk_x[rank, : mb.size] = x_raw[mb]
+        blk_y[rank, : mb.size] = y[mb]
+        blk_mask[rank, : mb.size] = True
+        nb = neighbors[b][:m]
+        nn_x[rank, : nb.size] = x_raw[nb]
+        nn_y[rank, : nb.size] = y[nb]
+        nn_mask[rank, : nb.size] = True
+        owners[rank] = blocks.owners[b]
+    return PackedBlocks(blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, owners)

@@ -1,0 +1,124 @@
+"""Block prediction with conditional simulation (paper Eq. 3 + §5.1.5).
+
+Test points are clustered into prediction blocks (bs_pred); each block is
+conditioned on its m_pred nearest TRAINING points (no ordering constraint
+— Eq. 3 conditions on the full training vector y). Per paper §5.1.5 the
+per-point predictive distribution N(mu_j, sigma_j^2) is then sampled (1000
+draws) to form sample means and 95% confidence intervals.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import build_blocks, scale_inputs
+from .kernels_math import KernelParams
+from .nns import filtered_knn_points
+from .vecchia import _masked_cov
+
+
+@dataclass
+class Prediction:
+    mean: np.ndarray       # (n*,) conditional mean mu_new
+    var: np.ndarray        # (n*,) conditional marginal variance
+    sim_mean: np.ndarray   # (n*,) conditional-simulation sample mean
+    ci_low: np.ndarray     # (n*,) 95% CI bounds from simulation
+    ci_high: np.ndarray
+
+
+def _predict_one(params, nu, qx, qmask, nx, ny, nmask):
+    sigma_con = _masked_cov(nx, nx, nmask, nmask, params, nu, identity=True)
+    sigma_cross = _masked_cov(nx, qx, nmask, qmask, params, nu, identity=False)
+    ynn = jnp.where(nmask, ny, 0.0)
+    chol = jnp.linalg.cholesky(sigma_con)
+    a = jax.scipy.linalg.solve_triangular(chol, sigma_cross, lower=True)
+    z = jax.scipy.linalg.solve_triangular(chol, ynn, lower=True)
+    mu = a.T @ z
+    prior = params.sigma2 + params.nugget
+    var = prior - jnp.sum(a * a, axis=0)
+    return mu, jnp.maximum(var, 1e-12)
+
+
+def predict_sbv(
+    params: KernelParams,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_test: np.ndarray,
+    bs_pred: int = 25,
+    m_pred: int = 200,
+    nu: float = 3.5,
+    alpha: float = 100.0,
+    n_sims: int = 1000,
+    seed: int = 0,
+    n_workers: int = 1,
+    beta_struct: np.ndarray | None = None,
+) -> Prediction:
+    """``beta_struct`` overrides the scaling used for clustering/NNS only
+    (paper Fig. 4 isolates structure quality: BV = isotropic structure +
+    true kernel; SBV = scaled structure + true kernel)."""
+    beta = np.asarray(params.beta if beta_struct is None else beta_struct)
+    xs_train = scale_inputs(x_train, beta)
+    xs_test = scale_inputs(x_test, beta)
+    n_test, d = x_test.shape
+
+    # Training blocks give the coarse structure for filtered kNN.
+    bc_train = max(1, x_train.shape[0] // max(4 * m_pred, 64))
+    train_blocks = build_blocks(xs_train, bc_train, n_workers, beta, seed=seed)
+
+    # Prediction blocks over the test points.
+    bc_pred = max(1, n_test // bs_pred)
+    test_blocks = build_blocks(xs_test, bc_pred, n_workers, beta, seed=seed + 1)
+    neigh = filtered_knn_points(xs_train, train_blocks, test_blocks.centers, m_pred, alpha)
+
+    bs_max = max(mb.size for mb in test_blocks.members)
+    bcp = test_blocks.n_blocks
+    qx = np.zeros((bcp, bs_max, d))
+    qmask = np.zeros((bcp, bs_max), dtype=bool)
+    nx = np.zeros((bcp, m_pred, d))
+    ny = np.zeros((bcp, m_pred))
+    nmask = np.zeros((bcp, m_pred), dtype=bool)
+    for b, mb in enumerate(test_blocks.members):
+        qx[b, : mb.size] = x_test[mb]
+        qmask[b, : mb.size] = True
+        nb = neigh[b][:m_pred]
+        nx[b, : nb.size] = x_train[nb]
+        ny[b, : nb.size] = y_train[nb]
+        nmask[b, : nb.size] = True
+
+    mu_b, var_b = jax.jit(
+        jax.vmap(lambda a, b_, c, d_, e: _predict_one(params, nu, a, b_, c, d_, e))
+    )(jnp.asarray(qx), jnp.asarray(qmask), jnp.asarray(nx), jnp.asarray(ny), jnp.asarray(nmask))
+
+    mean = np.zeros(n_test)
+    var = np.zeros(n_test)
+    mu_b = np.asarray(mu_b)
+    var_b = np.asarray(var_b)
+    for b, mb in enumerate(test_blocks.members):
+        mean[mb] = mu_b[b, : mb.size]
+        var[mb] = var_b[b, : mb.size]
+
+    # Conditional simulation (paper: 1000 draws from N(mu_j, sigma_j)).
+    key = jax.random.PRNGKey(seed)
+    draws = np.asarray(
+        jax.random.normal(key, (n_sims, n_test)) * np.sqrt(var)[None, :] + mean[None, :]
+    )
+    sim_mean = draws.mean(axis=0)
+    sim_std = draws.std(axis=0, ddof=1)
+    z975 = 1.959963984540054
+    return Prediction(
+        mean=mean, var=var, sim_mean=sim_mean,
+        ci_low=sim_mean - z975 * sim_std, ci_high=sim_mean + z975 * sim_std,
+    )
+
+
+def mspe(pred: np.ndarray, truth: np.ndarray) -> float:
+    return float(np.mean((pred - truth) ** 2))
+
+
+def rmspe(pred: np.ndarray, truth: np.ndarray) -> float:
+    """Root Mean Squared Percentage Error (paper §6.2)."""
+    denom = np.where(np.abs(truth) > 1e-12, truth, 1.0)
+    return float(np.sqrt(np.mean(((pred - truth) / denom) ** 2)) * 100.0)

@@ -1,0 +1,163 @@
+"""Block-Vecchia log-likelihood (paper Eq. 2 + Alg. 5) — pure-jnp reference.
+
+Each block contributes the conditional Gaussian log-density
+    log p(y_B | y_NN(B))
+computed exactly as Alg. 5:
+    Sigma_con   = K(NN, NN) + nugget I        (m x m)
+    Sigma_cross = K(NN, B)                    (m x bs)
+    Sigma_lk    = K(B, B)   + nugget I        (bs x bs)
+    L  = chol(Sigma_con);  A = L^-1 Sigma_cross;  z = L^-1 y_NN
+    Sigma_new = Sigma_lk - A^T A;  mu = A^T z
+    L' = chol(Sigma_new);  v = L'^-1 (y_B - mu)
+    ll = -0.5*bs*log(2pi) - sum(log diag L') - 0.5 v^T v
+
+Identity padding makes the fixed-size batched version exact for irregular
+block/neighbor counts (see packing.py). CV/SV are the bs=1 special case;
+BV/CV are the beta=1 (isotropic) special case — all four paper variants are
+parameterizations of this one function.
+
+This module is the ``ref`` oracle for the fused Pallas kernel in
+``repro/kernels/sbv_loglik.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_math import KernelParams, matern, scaled_sqdist
+
+_LOG2PI = float(jnp.log(2.0 * jnp.pi))
+
+
+def _masked_cov(xa, xb, mask_a, mask_b, params, nu, *, identity: bool):
+    """Covariance with masked rows/cols zeroed; optionally unit diagonal on
+    padded entries (only valid when xa is xb and masks coincide)."""
+    r = jnp.sqrt(scaled_sqdist(xa, xb, params.beta) + 1e-300)
+    k = params.sigma2 * matern(r, nu)
+    mm = mask_a[:, None] & mask_b[None, :]
+    k = jnp.where(mm, k, 0.0)
+    if identity:
+        n = xa.shape[0]
+        eye = jnp.eye(n, dtype=k.dtype)
+        k = k + params.nugget * jnp.where(mask_a, 1.0, 0.0)[:, None] * eye
+        k = k + jnp.where(mask_a, 0.0, 1.0)[:, None] * eye  # unit diag on pads
+    return k
+
+
+def _block_loglik_one(params, nu, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
+    sigma_con = _masked_cov(nn_x, nn_x, nn_mask, nn_mask, params, nu, identity=True)
+    sigma_cross = _masked_cov(nn_x, blk_x, nn_mask, blk_mask, params, nu, identity=False)
+    sigma_lk = _masked_cov(blk_x, blk_x, blk_mask, blk_mask, params, nu, identity=True)
+
+    ynn = jnp.where(nn_mask, nn_y, 0.0)
+    yb = jnp.where(blk_mask, blk_y, 0.0)
+
+    chol_con = jnp.linalg.cholesky(sigma_con)
+    a = jax.scipy.linalg.solve_triangular(chol_con, sigma_cross, lower=True)
+    z = jax.scipy.linalg.solve_triangular(chol_con, ynn, lower=True)
+
+    sigma_new = sigma_lk - a.T @ a
+    mu = a.T @ z
+
+    chol_new = jnp.linalg.cholesky(sigma_new)
+    v = jax.scipy.linalg.solve_triangular(chol_new, yb - mu, lower=True)
+
+    n_real = jnp.sum(blk_mask)
+    logdet = 2.0 * jnp.sum(jnp.where(blk_mask, jnp.log(jnp.diag(chol_new)), 0.0))
+    return -0.5 * n_real * _LOG2PI - 0.5 * logdet - 0.5 * jnp.dot(v, v)
+
+
+def _block_loglik_joint_one(params, nu, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
+    """Joint-assembly form (beyond-paper optimization, §Perf-1).
+
+    Builds ONE (m+bs)x(m+bs) covariance over [nn; blk] and factorizes it
+    once. With L = [[L11, 0], [L21, L22]] the block conditional falls out
+    of the joint solve: Sigma_new = L22 L22^T and
+    v = L22^{-1} (y_B - mu) is the tail of L^{-1} [y_nn; y_B]. Replaces
+    the paper's POTRF+TRSM+GEMM+POTRF+TRSV MAGMA chain with POTRF+TRSV —
+    ~2x fewer O(m^2)-sized HBM passes at equal FLOPs.
+    """
+    x = jnp.concatenate([nn_x, blk_x], axis=0)
+    mask = jnp.concatenate([nn_mask, blk_mask], axis=0)
+    yv = jnp.concatenate([jnp.where(nn_mask, nn_y, 0.0),
+                          jnp.where(blk_mask, blk_y, 0.0)])
+    m = nn_x.shape[0]
+
+    sigma = _masked_cov(x, x, mask, mask, params, nu, identity=True)
+    chol = jnp.linalg.cholesky(sigma)
+    v = jax.scipy.linalg.solve_triangular(chol, yv, lower=True)
+
+    vb = v[m:]
+    n_real = jnp.sum(blk_mask)
+    logdet = 2.0 * jnp.sum(jnp.where(blk_mask, jnp.log(jnp.diag(chol)[m:]), 0.0))
+    return -0.5 * n_real * _LOG2PI - 0.5 * logdet - 0.5 * jnp.dot(vb, vb)
+
+
+@partial(jax.jit, static_argnames=("nu",))
+def batched_block_loglik_joint(
+    params: KernelParams,
+    blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+) -> jax.Array:
+    """Joint-assembly batched likelihood (same value as
+    ``batched_block_loglik``; see ``_block_loglik_joint_one``)."""
+    per_block = jax.vmap(
+        lambda a, b, c, d, e, f: _block_loglik_joint_one(params, nu, a, b, c, d, e, f)
+    )(blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+    return jnp.sum(per_block)
+
+
+@partial(jax.jit, static_argnames=("nu",))
+def batched_block_loglik_joint_remat(
+    params: KernelParams,
+    blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+) -> jax.Array:
+    """Joint assembly with a checkpointed per-block body: the backward
+    pass recomputes the covariance build instead of loading saved
+    (m+bs)^2 intermediates (§Perf-1 iteration 2)."""
+    body = jax.checkpoint(
+        lambda a, b, c, d, e, f: _block_loglik_joint_one(params, nu, a, b, c, d, e, f)
+    )
+    per_block = jax.vmap(body)(blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+    return jnp.sum(per_block)
+
+
+@partial(jax.jit, static_argnames=("nu",))
+def batched_block_loglik(
+    params: KernelParams,
+    blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+) -> jax.Array:
+    """Sum of per-block conditional log-densities (vmapped reference)."""
+    per_block = jax.vmap(
+        lambda a, b, c, d, e, f: _block_loglik_one(params, nu, a, b, c, d, e, f)
+    )(blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+    return jnp.sum(per_block)
+
+
+def packed_loglik(params: KernelParams, packed, nu: float = 3.5, backend: str = "ref") -> jax.Array:
+    """Log-likelihood of a PackedBlocks dataset.
+
+    backend='ref' uses this module's vmapped jnp path; backend='pallas'
+    dispatches to the fused TPU kernel (interpret mode on CPU).
+    """
+    if backend == "ref":
+        return batched_block_loglik(
+            params,
+            jnp.asarray(packed.blk_x), jnp.asarray(packed.blk_y), jnp.asarray(packed.blk_mask),
+            jnp.asarray(packed.nn_x), jnp.asarray(packed.nn_y), jnp.asarray(packed.nn_mask),
+            nu=nu,
+        )
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.sbv_loglik(
+            params,
+            jnp.asarray(packed.blk_x), jnp.asarray(packed.blk_y), jnp.asarray(packed.blk_mask),
+            jnp.asarray(packed.nn_x), jnp.asarray(packed.nn_y), jnp.asarray(packed.nn_mask),
+            nu=nu,
+        )
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,3 @@
+from .gp_sim import metarvm_simulate, sample_gp_exact, sample_gp_rff, satellite_drag_like
+
+__all__ = ["metarvm_simulate", "sample_gp_exact", "sample_gp_rff", "satellite_drag_like"]

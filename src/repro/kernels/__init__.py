@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots (DESIGN.md §3):
+#   sbv_loglik.py      — the paper's MAGMA pipeline fused per block
+#   matern_cov.py      — tiled scaled-Matern covariance
+#   flash_attention.py — online-softmax attention (LM substrate)
+# ops.py holds the jit'd public wrappers; ref/flash_ref are jnp oracles.

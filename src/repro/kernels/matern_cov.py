@@ -1,0 +1,75 @@
+"""Batched scaled-Matern covariance tile kernel (pl.pallas_call + BlockSpec).
+
+Builds K(Xa, Xb) for a batch of point-set pairs with 2D output tiling:
+grid = (batch, ceil(na/TN), ceil(nb/TM)); each cell computes a (TN, TM)
+covariance tile from (TN, d) and (TM, d) coordinate slabs held in VMEM.
+Used by the prediction path and as the simple exemplar kernel; the fused
+likelihood kernel (sbv_loglik.py) inlines the same math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .sbv_loglik import _matern_poly
+
+
+def _cov_kernel(xa_ref, xb_ref, beta_ref, scal_ref, out_ref, *, nu: float):
+    beta = beta_ref[...]
+    sigma2 = scal_ref[0]
+    za = xa_ref[0] / beta            # (TN, d)
+    zb = xb_ref[0] / beta            # (TM, d)
+    d2 = (
+        jnp.sum(za * za, axis=-1)[:, None]
+        + jnp.sum(zb * zb, axis=-1)[None, :]
+        - 2.0 * jnp.dot(za, zb.T, preferred_element_type=za.dtype)
+    )
+    r = jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-30)
+    out_ref[0] = sigma2 * _matern_poly(r, nu)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "tile_n", "tile_m", "interpret"))
+def matern_cov_pallas(
+    xa, xb, beta, sigma2,
+    nu: float = 3.5,
+    tile_n: int = 128,
+    tile_m: int = 128,
+    interpret: bool | None = None,
+):
+    """Batched covariance: xa (B, na, d), xb (B, nb, d) -> (B, na, nb)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, na, d = xa.shape
+    nb = xb.shape[1]
+    dtype = xa.dtype
+    tn = min(tile_n, na)
+    tm = min(tile_m, nb)
+    # Pad to tile multiples; padded coords are zeros — results cropped below.
+    pad_n = (-na) % tn
+    pad_m = (-nb) % tm
+    if pad_n:
+        xa = jnp.pad(xa, ((0, 0), (0, pad_n), (0, 0)))
+    if pad_m:
+        xb = jnp.pad(xb, ((0, 0), (0, pad_m), (0, 0)))
+    gn = (na + pad_n) // tn
+    gm = (nb + pad_m) // tm
+    scal = jnp.asarray([sigma2], dtype)
+    beta = jnp.asarray(beta, dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_cov_kernel, nu=nu),
+        grid=(b, gn, gm),
+        in_specs=[
+            pl.BlockSpec((1, tn, d), lambda i, j, k: (i, j, 0)),
+            pl.BlockSpec((1, tm, d), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((d,), lambda i, j, k: (0,)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tn, tm), lambda i, j, k: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((b, na + pad_n, nb + pad_m), dtype),
+        interpret=interpret,
+    )(xa, xb, beta, scal)
+    return out[:, :na, :nb]

@@ -1,0 +1,79 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``sbv_loglik`` is differentiable: the forward pass runs the fused Pallas
+kernel; the backward pass is the VJP of the pure-jnp reference (the
+likelihood is a scalar, so the cotangent is a scalar — the rebuild is one
+extra likelihood-shaped pass, exactly what MAGMA-based codes pay for finite
+differences, but here it is an analytic gradient).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_math import KernelParams
+from repro.core.vecchia import batched_block_loglik
+
+from .matern_cov import matern_cov_pallas
+from .sbv_loglik import sbv_loglik_pallas
+
+
+def _ref_total(params: KernelParams, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu):
+    return batched_block_loglik(
+        params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu=nu
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7,))
+def sbv_loglik(params: KernelParams, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu=3.5):
+    """Total SBV log-likelihood via the fused Pallas kernel."""
+    dtype = blk_x.dtype
+    per_block = sbv_loglik_pallas(
+        params.beta.astype(dtype),
+        params.sigma2.astype(dtype),
+        params.nugget.astype(dtype),
+        blk_x, blk_y, blk_mask.astype(dtype),
+        nn_x, nn_y, nn_mask.astype(dtype),
+        nu=nu,
+    )
+    return jnp.sum(per_block)
+
+
+def _fwd(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu):
+    out = sbv_loglik(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu)
+    return out, (params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+
+
+def _bwd(nu, res, g):
+    params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask = res
+    grad_fn = jax.grad(
+        lambda p, by, ny: _ref_total(
+            p, blk_x, by, blk_mask.astype(bool), nn_x, ny, nn_mask.astype(bool), nu
+        ),
+        argnums=(0, 1, 2),
+    )
+    gp, gby, gny = grad_fn(params, blk_y, nn_y)
+    scale = lambda t: jax.tree.map(lambda a: a * g, t)
+    zeros_like = lambda a: jnp.zeros_like(a)
+    return (
+        scale(gp), zeros_like(blk_x), scale(gby), zeros_like(blk_mask),
+        zeros_like(nn_x), scale(gny), zeros_like(nn_mask),
+    )
+
+
+sbv_loglik.defvjp(_fwd, _bwd)
+
+
+def matern_cov(xa, xb, params: KernelParams, nu: float = 3.5, tile: int = 128):
+    """Batched scaled-Matern covariance via the tiled Pallas kernel."""
+    dtype = xa.dtype
+    return matern_cov_pallas(
+        xa, xb, params.beta.astype(dtype), params.sigma2.astype(dtype),
+        nu=nu, tile_n=tile, tile_m=tile,
+    )
+
+
+# flash attention: fwd-fused kernel; see kernels/flash_attention.py
+from .flash_attention import flash_attention  # noqa: E402,F401

@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill + decode loop with a sharded KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --reduced --batch 4 --prompt-len 64 --max-new 32 --mesh 1x1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import init_params, prefill_step, serve_step
+from repro.sharding.rules import batch_spec, cache_specs, param_specs, tp_size
+from repro.launch.train import make_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_mesh(args.mesh)
+    tp = tp_size(mesh)
+    cache_len = args.prompt_len + args.max_new
+
+    params = init_params(jax.random.key(0), cfg, tp)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       param_specs(params, mesh),
+                       is_leaf=lambda x: isinstance(x, P))
+    params = jax.device_put(params, psh)
+
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)), jnp.int32
+    )
+
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        logits, cache = jax.jit(
+            lambda p, t: prefill_step(p, t, cfg, cache_len, tp=tp)
+        )(params, prompt)
+        csh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           cache_specs(cache, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+        cache = jax.device_put(cache, csh)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        print(f"[serve] prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+
+        decode = jax.jit(
+            lambda p, t, c: serve_step(p, t, c, cfg, tp=tp),
+            donate_argnums=(2,),
+        )
+        out = [tok]
+        t0 = time.time()
+        for _ in range(args.max_new - 1):
+            logits, cache = decode(params, tok, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
+        dt = time.time() - t0
+        toks = jnp.concatenate(out, axis=1)
+    rate = args.batch * (args.max_new - 1) / dt
+    print(f"[serve] decoded {args.max_new-1} steps x {args.batch} seqs: "
+          f"{dt:.2f}s ({rate:.1f} tok/s)")
+    print("[serve] sample tokens:", np.asarray(toks[0, :16]))
+    return toks
+
+
+if __name__ == "__main__":
+    main()

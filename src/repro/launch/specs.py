@@ -1,0 +1,197 @@
+"""ShapeDtypeStruct stand-ins + step builders for every dry-run cell.
+
+``input_specs(arch, shape)`` returns (step_fn, arg_specs, in_shardings,
+out_shardings, donate) — everything ``jax.jit(...).lower()`` needs, with no
+device allocation. [audio]/[vlm] archs consume precomputed token ids (the
+modality frontend is a stub per the assignment).
+
+The SBV GP runtime is an extra dry-run target ("sbv-gp"): one gradient
+step of the distributed block-Vecchia likelihood, blocks sharded over all
+mesh axes flattened into the paper's P workers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.models.model import init_params, make_empty_cache, serve_step, prefill_step
+from repro.sharding.rules import batch_spec, cache_specs, param_specs, tp_size
+from repro.training.train_step import TrainState, make_train_step, train_state_init
+
+
+def _named(mesh: Mesh, tree_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_params(cfg, tp: int = 1):
+    return jax.eval_shape(lambda k: init_params(k, cfg, tp), jax.random.key(0))
+
+
+def abstract_train_state(cfg, tp: int = 1):
+    params = abstract_params(cfg, tp)
+    return jax.eval_shape(train_state_init, params)
+
+
+def train_cell(cfg, shape, mesh: Mesh):
+    """Lowerable train_step for (arch, train shape, mesh)."""
+    tp = tp_size(mesh)
+    state = abstract_train_state(cfg, tp)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+
+    pspecs = param_specs(state.params, mesh)
+    sspecs = TrainState(
+        params=pspecs,
+        opt=type(state.opt)(step=P(), mu=pspecs, nu=pspecs),
+        step=P(),
+    )
+    bspec = batch_spec(mesh, shape.global_batch)
+
+    step = make_train_step(cfg, tp=tp)
+    in_shardings = (_named(mesh, sspecs), _named(mesh, bspec), _named(mesh, bspec))
+    out_shardings = (_named(mesh, sspecs), _named(mesh, {"loss": P(), "grad_norm": P()}))
+    return step, (state, tok, tok), in_shardings, out_shardings, (0,)
+
+
+def prefill_cell(cfg, shape, mesh: Mesh):
+    tp = tp_size(mesh)
+    params = abstract_params(cfg, tp)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+    pspecs = param_specs(params, mesh)
+    bspec = batch_spec(mesh, shape.global_batch)
+
+    cache_len = shape.seq_len
+    fn = functools.partial(prefill_step, cfg=cfg, cache_len=cache_len, tp=tp)
+    step = lambda p, t: fn(p, t)
+
+    cache = jax.eval_shape(
+        lambda p, t: fn(p, t)[1], params, tok
+    )
+    cspecs = cache_specs(cache, mesh)
+    logits_spec = P(bspec[0], None)  # (B, V) — batch over dp
+    in_shardings = (_named(mesh, pspecs), _named(mesh, bspec))
+    out_shardings = (_named(mesh, logits_spec), _named(mesh, cspecs))
+    return step, (params, tok), in_shardings, out_shardings, ()
+
+
+def decode_cell(cfg, shape, mesh: Mesh):
+    """One-token serve_step against a seq_len-deep cache."""
+    tp = tp_size(mesh)
+    params = abstract_params(cfg, tp)
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda p: make_empty_cache(p, cfg, b, shape.seq_len, tp=tp), params
+    )
+    pspecs = param_specs(params, mesh)
+    cspecs = cache_specs(cache, mesh)
+    bspec = batch_spec(mesh, b)
+
+    def step(p, t, c):
+        return serve_step(p, t, c, cfg, tp=tp)
+
+    logits_spec = P(bspec[0], None)
+    in_shardings = (_named(mesh, pspecs), _named(mesh, bspec), _named(mesh, cspecs))
+    out_shardings = (_named(mesh, logits_spec), _named(mesh, cspecs))
+    return step, (params, tok, cache), in_shardings, out_shardings, (2,)
+
+
+# ------------------------------------------------------------- SBV GP ----
+
+SBV_GP_SHAPES = {
+    # paper workloads: MetaRVM 50M pts d=10 (bs=100, m=400: paper's largest
+    # accuracy config), and the Fig.9 strong-scaling 128M-point run.
+    "fit_50m": dict(n=50_000_000, d=10, bs=100, m=400),
+    "fit_128m": dict(n=128_000_000, d=10, bs=100, m=200),
+}
+
+
+def sbv_gp_cell(shape_name: str, mesh: Mesh, variant: str = "magma"):
+    """One MLE gradient step of the distributed SBV likelihood.
+
+    Blocks are sharded over ALL mesh axes (flattened = the paper's P
+    workers). The lowered graph contains the batched per-block pipeline +
+    the scalar psum (the paper's MPI_Allreduce).
+
+    variant: 'magma' = the paper-faithful POTRF/TRSM/GEMM/TRSV chain;
+             'joint' = single joint-Cholesky assembly (§Perf-1);
+             'joint_remat' = joint + checkpointed covariance build.
+    """
+    from repro.core.kernels_math import KernelParams
+    from repro.core.vecchia import batched_block_loglik, batched_block_loglik_joint
+
+    spec = SBV_GP_SHAPES[shape_name]
+    n, d, bs, m = spec["n"], spec["d"], spec["bs"], spec["m"]
+    bc = n // bs
+    n_dev = mesh.size
+    bc = ((bc + n_dev - 1) // n_dev) * n_dev
+    axes = tuple(mesh.axis_names)
+
+    f64 = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    args = (
+        KernelParams(
+            log_sigma2=jax.ShapeDtypeStruct((), f64),
+            log_beta=jax.ShapeDtypeStruct((d,), f64),
+            log_nugget=jax.ShapeDtypeStruct((), f64),
+        ),
+        jax.ShapeDtypeStruct((bc, bs, d), f64),   # blk_x
+        jax.ShapeDtypeStruct((bc, bs), f64),      # blk_y
+        jax.ShapeDtypeStruct((bc, bs), jnp.bool_),
+        jax.ShapeDtypeStruct((bc, m, d), f64),    # nn_x
+        jax.ShapeDtypeStruct((bc, m), f64),       # nn_y
+        jax.ShapeDtypeStruct((bc, m), jnp.bool_),
+    )
+
+    blocks = P(axes)
+
+    fwd_only = variant.endswith("_fwd")
+    base = variant[:-4] if fwd_only else variant
+    if base == "magma":
+        loglik_fn = batched_block_loglik
+    elif base in ("joint", "joint_remat"):
+        loglik_fn = batched_block_loglik_joint
+        if base == "joint_remat":
+            from repro.core.vecchia import batched_block_loglik_joint_remat
+            loglik_fn = batched_block_loglik_joint_remat
+    else:
+        raise ValueError(variant)
+
+    if fwd_only:
+        # paper-parity path: derivative-free NLopt evaluates the likelihood
+        # only; no backward pass is lowered.
+        def step(params, bx, by, bm, nx, ny, nm):
+            return (-loglik_fn(params, bx, by, bm, nx, ny, nm, nu=3.5) / n,
+                    params)
+    else:
+        def step(params, bx, by, bm, nx, ny, nm):
+            def nll(p):
+                return -loglik_fn(p, bx, by, bm, nx, ny, nm, nu=3.5) / n
+            loss, g = jax.value_and_grad(nll)(params)
+            return loss, g
+
+    in_shardings = (_named(mesh, P()),) + tuple(_named(mesh, blocks) for _ in range(6))
+    out_shardings = (_named(mesh, P()), _named(mesh, P()))
+    return step, args, in_shardings, out_shardings, ()
+
+
+# ------------------------------------------------------------ registry ----
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, **opts):
+    """(arch, shape, mesh) -> (step_fn, arg_specs, in_sh, out_sh, donate)."""
+    if arch == "sbv-gp":
+        return sbv_gp_cell(shape_name, mesh, **opts)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return decode_cell(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,9 @@
+from .model import (
+    embed_tokens, init_params, lm_loss, logits_fn, make_empty_cache,
+    model_dtype, prefill_step, serve_step,
+)
+
+__all__ = [
+    "embed_tokens", "init_params", "lm_loss", "logits_fn", "make_empty_cache",
+    "model_dtype", "prefill_step", "serve_step",
+]

@@ -1,0 +1,250 @@
+"""GQA attention with sliding-window / softcap variants + KV-cache decode.
+
+One implementation serves all seven attention archs: full causal, local
+(sliding window), gemma2 local/global alternation (the window arrives as a
+traced per-layer scalar so the layer pattern can live inside lax.scan), and
+attention-logit softcaps.
+
+Long sequences stream over QUERY chunks (lax.scan) so the fp32 score tile
+is (B, Hq, Qc, T) instead of (B, Hq, S, T) — the pure-JAX analogue of a
+flash kernel's outer loop; 32k prefill stays within HBM. Decode reads and
+writes a (B, S_max, Hkv, hd) cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import BATCH, constrain, model_divides
+
+from .layers import apply_rope, dense_init, softcap
+
+_Q_CHUNK = 1024
+
+
+def attn_init(key, cfg, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * cfg.head_dim, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wo": dense_init(ko, cfg.n_heads * cfg.head_dim, d, dtype,
+                         scale=(cfg.n_heads * cfg.head_dim) ** -0.5),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _expand_kv(k, n_rep):
+    """(B,T,Hkv,hd) -> (B,T,Hq,hd); query head h uses kv group h // n_rep.
+
+    Megatron-GQA TP: the explicit repeat keeps the einsums on FULL query
+    heads, so the 'model' axis shards attention activations by head. (The
+    earlier (G, rep)-factored einsum broke XLA sharding propagation — a
+    16-head tensor reshaped to (8, 2) cannot carry a 16-way sharding — and
+    silently replicated all attention compute across the model axis.)
+    """
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _gqa_scores(q, k, n_rep):
+    """q (B,S,Hq,hd), k (B,T,Hkv,hd) -> scores (B,Hq,S,T)."""
+    return jnp.einsum("bsqh,btqh->bqst", q, _expand_kv(k, n_rep))
+
+
+def _gqa_out(probs, v, n_rep):
+    """probs (B,Hq,S,T), v (B,T,Hkv,hd) -> (B,S,Hq,hd)."""
+    return jnp.einsum("bqst,btqh->bsqh", probs, _expand_kv(v, n_rep))
+
+
+def _gqa_scores_grouped(q, k):
+    """Grouped (no-repeat) score einsum for DECODE reads.
+
+    q (B,S,Hq,hd), k (B,T,G,hd), G | Hq. Splitting Hq -> (G, rep) keeps
+    the cache-head axis intact, so a head-sharded cache propagates —
+    and the rep-expanded cache is never materialized (the repeat form
+    would write an n_rep x copy of the whole cache every layer).
+    """
+    b, s, hq, hd = q.shape
+    g = k.shape[2]
+    qg = q.reshape(b, s, g, hq // g, hd)
+    sc = jnp.einsum("bsgrh,btgh->bgrst", qg, k)
+    return sc.reshape(b, hq, s, k.shape[1])
+
+
+def _gqa_out_grouped(probs, v, hq):
+    """probs (B,Hq,S,T), v (B,T,G,hd) -> (B,S,Hq,hd); G | Hq."""
+    b, _, s, t = probs.shape
+    g = v.shape[2]
+    pg = probs.reshape(b, g, hq // g, s, t)
+    out = jnp.einsum("bgrst,btgh->bsgrh", pg, v)
+    return out.reshape(b, s, hq, v.shape[-1])
+
+
+def _attend_block(q, k, v, qpos, kpos, window, attn_softcap, n_rep, dtype):
+    """One (Q-chunk x full-KV) attention tile with causal+window mask.
+
+    Activation sharding: heads over 'model' when the head count divides
+    it (Megatron TP); otherwise the QUERY-sequence dim (Megatron
+    sequence-parallel attention — e.g. minitron's 24 heads on a 16-way
+    axis). Without the fallback XLA re-gathers score-sized tensors every
+    chunk x layer (measured 6.8 TB wire/device on minitron prefill_32k).
+    """
+    hd = q.shape[-1]
+    by_head = model_divides(q.shape[2])
+    scores = _gqa_scores(q, k, n_rep).astype(jnp.float32) * (hd ** -0.5)
+    scores = (constrain(scores, BATCH, "model", None, None) if by_head
+              else constrain(scores, BATCH, None, "model", None))
+    scores = softcap(scores, attn_softcap)
+    dist = qpos[:, :, None] - kpos[:, None, :]
+    allow = (dist >= 0) & ((window <= 0) | (dist < window))
+    scores = jnp.where(allow[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = _gqa_out(probs, v, n_rep)
+    return (constrain(out, BATCH, None, "model", None) if by_head
+            else constrain(out, BATCH, "model", None, None))
+
+
+def _flash_enabled(cfg) -> bool:
+    if cfg.use_flash == "always":
+        return True
+    if cfg.use_flash == "never":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def attention(params, x, cfg, *, window, positions):
+    """Full-sequence (training / prefill) attention.
+
+    window: traced scalar; <=0 means global, >0 limits lookback distance.
+    positions: (B, S) int32 token positions.
+
+    Global-attention archs route through the fused flash kernel
+    (kernels/flash_attention.py) on TPU: the (B,H,S,T) score tensor stays
+    in VMEM instead of dominating the HBM roofline term. The local/global
+    (gemma2) pattern carries a TRACED window through lax.scan, which the
+    static-shape kernel cannot consume — it keeps the XLA streaming path.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    by_head = model_divides(cfg.n_heads)
+    if by_head:
+        q = constrain(q, BATCH, None, "model", None)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # Pin K/V to kv-head sharding (or replication when Hkv doesn't divide
+    # the model axis). Without this XLA shards the small head_dim instead
+    # and every score einsum contracts over a sharded dim -> partial-sum
+    # all-reduces of score-sized tensors (measured: the 2nd/3rd largest
+    # collectives in minitron train_4k).
+    k = constrain(k, BATCH, None, "model", None)
+    v = constrain(v, BATCH, None, "model", None)
+
+    if (_flash_enabled(cfg) and cfg.sliding_window == 0
+            and not cfg.local_global):
+        from repro.kernels.flash_attention import flash_attention
+
+        kf = _expand_kv(k, n_rep).swapaxes(1, 2)     # (B,H,T,hd)
+        vf = _expand_kv(v, n_rep).swapaxes(1, 2)
+        qt = max(min(512, s), 1)
+        while s % qt:
+            qt //= 2
+        o = flash_attention(q.swapaxes(1, 2), kf, vf, causal=True,
+                            softcap=cfg.attn_softcap,
+                            q_tile=qt, k_tile=qt)
+        out = constrain(o.swapaxes(1, 2), BATCH, None, "model", None)
+        return out.reshape(b, s, -1) @ params["wo"]
+
+    if s <= _Q_CHUNK:
+        if not by_head:
+            q = constrain(q, BATCH, "model", None, None)
+        out = _attend_block(q, k, v, positions, positions, window,
+                            cfg.attn_softcap, n_rep, x.dtype)
+    else:
+        assert s % _Q_CHUNK == 0, f"seq {s} not divisible by q-chunk {_Q_CHUNK}"
+        nc = s // _Q_CHUNK
+        qc = q.reshape(b, nc, _Q_CHUNK, cfg.n_heads, hd).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(b, nc, _Q_CHUNK).transpose(1, 0, 2)
+        if not by_head:
+            # sequence-parallel fallback: shard WITHIN each query chunk
+            # (the scan dim itself must stay unsharded)
+            qc = constrain(qc, None, BATCH, "model", None, None)
+
+        def body(_, qp):
+            qi, pi = qp
+            o = _attend_block(qi, k, v, pi, positions, window,
+                              cfg.attn_softcap, n_rep, x.dtype)
+            return (), o
+
+        _, out = jax.lax.scan(body, (), (qc, pc))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, cfg.n_heads, hd)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def cache_expand_factor(cfg, tp: int) -> int:
+    """Duplication factor r for the decode KV cache (1 = no expansion).
+
+    When Hkv doesn't divide the model axis, a (B,S,Hkv,hd) cache can only
+    seq-shard — and the per-token dynamic-update-slice then forces an
+    involuntary full rematerialization (measured: ~1-3 s/token of
+    collectives on every kv=8 arch). Duplicating each kv head r times —
+    the SMALLEST r dividing n_rep with (Hkv*r) % tp == 0 — makes the
+    cache head-shardable, so decode reads become fully local, at r x
+    cache memory (r=2 for every kv=8 arch on the 16-way axis). The
+    grouped einsums infer the repetition from the cache shape, so partial
+    expansion needs no further changes.
+    """
+    if tp <= 1 or cfg.n_kv_heads % tp == 0:
+        return 1
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    for r in range(2, n_rep + 1):
+        if n_rep % r == 0 and (cfg.n_kv_heads * r) % tp == 0:
+            return r
+    return 1
+
+
+def cache_expand_kv(cfg, tp: int) -> bool:
+    return cache_expand_factor(cfg, tp) > 1
+
+
+def attention_decode(params, x, cache_k, cache_v, pos, cfg, *, window):
+    """Single-token decode. x (B,1,D); cache (B,Smax,Hc,hd); pos scalar.
+
+    Hc is either Hkv (grouped cache) or Hq (expanded cache — see
+    ``cache_expand_kv``); the repetition factor is inferred from the
+    cache shape. Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = _split_heads(x @ params["wq"], cfg.n_heads, hd)      # (B,1,Hq,hd)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, hd)   # (B,1,Hkv,hd)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, hd)
+    posb = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    if cache_k.shape[2] != cfg.n_kv_heads:  # (partially) expanded cache
+        r = cache_k.shape[2] // cfg.n_kv_heads
+        k, v = _expand_kv(k, r), _expand_kv(v, r)
+
+    zero = jnp.zeros((), jnp.int32)
+    idx = (zero, jnp.asarray(pos, jnp.int32), zero, zero)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), idx)
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), idx)
+
+    scores = _gqa_scores_grouped(q, cache_k).astype(jnp.float32) * (hd ** -0.5)
+    scores = softcap(scores, cfg.attn_softcap)               # (B,Hq,1,Smax)
+    kpos = jnp.arange(cache_k.shape[1], dtype=jnp.int32)
+    allow = (kpos <= pos) & ((window <= 0) | (kpos > pos - window))
+    scores = jnp.where(allow[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out_grouped(probs, cache_v, cfg.n_heads)
+    return out.reshape(b, 1, -1) @ params["wo"], cache_k, cache_v

@@ -1,0 +1,79 @@
+"""Shared neural-net layers: RMSNorm, RoPE, SwiGLU, embeddings, softcap.
+
+Parameters are plain dict pytrees; per-layer parameters are stacked on a
+leading L axis and consumed by lax.scan (compile time independent of depth
+— essential for 42-88-layer dry-runs at 512 devices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(k1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    if kind == "relu2":  # nemotron/minitron squared-ReLU
+        return jnp.square(jax.nn.relu(x @ p["w_up"])) @ p["w_down"]
+    raise ValueError(kind)
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean CE over tokens; logits (..., V) fp32 logsumexp for stability."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

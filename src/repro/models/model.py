@@ -1,0 +1,106 @@
+"""LM wrapper: embeddings, chunked vocab-sharded loss, prefill/decode heads.
+
+``lm_loss`` streams the output projection + cross-entropy over sequence
+chunks under jax.checkpoint, so the (B, S, V) logits tensor never
+materializes (a 256k-vocab 4k-seq logits tensor would be tens of GB).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cross_entropy, rms_norm, softcap
+from .transformer import decode_step, forward_train, init_cache, prefill, stack_init
+
+_LOSS_CHUNK = 512
+
+
+def model_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(key, cfg, tp: int = 1):
+    dtype = model_dtype(cfg)
+    k_emb, k_stack, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "stack": stack_init(k_stack, cfg, dtype, tp),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not getattr(cfg, "tie_embeddings", False):
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), jnp.float32) * 0.02
+        ).astype(dtype)
+    return params
+
+
+def embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _head_matrix(params):
+    if "lm_head" in params:
+        return params["lm_head"]
+    return params["embed"].T
+
+
+def logits_fn(params, hidden, cfg):
+    logits = hidden @ _head_matrix(params)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def lm_loss(params, tokens, labels, cfg, tp: int = 1, aux_weight: float = 0.01):
+    """Mean next-token CE + MoE aux loss; loss head chunked over sequence."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, tokens, cfg)
+    hidden, aux = forward_train(params["stack"], x, cfg, positions, tp)
+    hidden = rms_norm(hidden, params["ln_f"], cfg.norm_eps)
+
+    head = _head_matrix(params)
+    chunk = min(_LOSS_CHUNK, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, l):
+        logits = softcap((h @ head).astype(jnp.float32), cfg.logit_softcap)
+        return cross_entropy(logits, l, cfg.vocab)
+
+    def body(acc, hl):
+        h, l = hl
+        return acc + chunk_loss(h, l), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc))
+    loss = total / nc
+    if cfg.n_experts:
+        loss = loss + aux_weight * aux / cfg.n_layers
+    return loss
+
+
+def prefill_step(params, tokens, cfg, cache_len: int, tp: int = 1):
+    """Prompt forward; returns (last-token logits (B,V), cache)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, tokens, cfg)
+    hidden, cache = prefill(params["stack"], x, cfg, positions, cache_len, tp)
+    hidden = rms_norm(hidden[:, -1:], params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, hidden, cfg)[:, 0], cache
+
+
+def serve_step(params, tokens, cache, cfg, tp: int = 1):
+    """One decode step: tokens (B,1) int32 -> (logits (B,V), new cache)."""
+    x = embed_tokens(params, tokens, cfg)
+    hidden, cache = decode_step(params["stack"], x, cfg, cache, tp)
+    hidden = rms_norm(hidden, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, hidden, cfg)[:, 0], cache
+
+
+def make_empty_cache(params, cfg, batch, cache_len, tp: int = 1):
+    return init_cache(params.get("stack"), cfg, batch, cache_len,
+                      model_dtype(cfg), tp=tp)

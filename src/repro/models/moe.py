@@ -1,0 +1,91 @@
+"""Top-k MoE with GShard-style grouped dense dispatch (+ shared experts).
+
+Tokens are split into groups of ``_GROUP`` tokens; capacity and the
+one-hot dispatch/combine tensors are per-group, so dispatch memory is
+O(T * E * capacity_per_group) = O(T * k * GROUP * cf) instead of O(T^2).
+Dense einsum dispatch partitions cleanly under SPMD: groups shard over the
+batch ('data') axes, experts over 'model' (EP) — the g->e einsum is the
+all-to-all. Expert counts that do not divide the mesh axis are PADDED with
+unroutable dummies (router logits -inf), e.g. qwen2-moe 60 -> 64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_init, swiglu
+
+_GROUP = 1024  # tokens per dispatch group
+
+
+def moe_init(key, cfg, dtype, n_experts_padded: int | None = None):
+    e = n_experts_padded or cfg.n_experts
+    d, f = cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    def expert_w(k, din, dout, scale):
+        return (jax.random.normal(k, (e, din, dout), jnp.float32) * scale).astype(dtype)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "w_gate": expert_w(ks[1], d, f, d ** -0.5),
+        "w_up": expert_w(ks[2], d, f, d ** -0.5),
+        "w_down": expert_w(ks[3], f, d, f ** -0.5),
+    }
+    if cfg.shared_d_ff:
+        p["shared"] = mlp_init(ks[4], d, cfg.shared_d_ff, dtype)
+    return p
+
+
+def moe_forward(params, x, cfg, n_experts_padded: int | None = None):
+    """x (B,S,D) -> (out (B,S,D), load-balance aux loss)."""
+    b, s, d = x.shape
+    e_real = cfg.n_experts
+    e = n_experts_padded or e_real
+    k = cfg.n_experts_active
+    t = b * s
+    gs = min(_GROUP, t)
+    assert t % gs == 0, (t, gs)
+    g = t // gs
+    xt = x.reshape(g, gs, d)
+
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)  # (G,gs,E)
+    if e > e_real:
+        logits = jnp.where(jnp.arange(e) >= e_real, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k routing: iterative argmax (k is small), renormalized weights
+    gates = jnp.zeros_like(probs)
+    remaining = probs
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)
+        onehot = jax.nn.one_hot(idx, e, dtype=probs.dtype)
+        gates = gates + onehot * probs
+        remaining = remaining * (1.0 - onehot)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # per-group capacity
+    capacity = max(int(cfg.capacity_factor * gs * k / e_real), 1)
+    selected = gates > 0.0
+    pos_in_e = jnp.cumsum(selected.astype(jnp.int32), axis=1) - 1      # (G,gs,E)
+    keep = selected & (pos_in_e < capacity)
+    gates = jnp.where(keep, gates, 0.0)
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, pos_in_e, -1), capacity, dtype=x.dtype)        # (G,gs,E,C)
+
+    dispatch = pos_oh
+    combine = pos_oh * gates[..., None].astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->egcd", dispatch, xt)                    # (E,G,C,D)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, params["w_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, params["w_up"])
+    ye = jnp.einsum("egcf,efd->egcd", h, params["w_down"])             # (E,G,C,D)
+    out = jnp.einsum("gtec,egcd->gtd", combine, ye).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch-style)
+    frac_tokens = jnp.mean(selected.astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e_real * jnp.sum(frac_tokens * frac_probs) / k
+
+    if cfg.shared_d_ff:
+        sh = params["shared"]
+        out = out + swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+    return out, aux

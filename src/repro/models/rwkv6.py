@@ -1,0 +1,171 @@
+"""RWKV-6 "Finch" block: data-dependent per-channel decay linear recurrence.
+
+Per head (key dim K, value dim V):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(wlog_t)) produced by a LoRA from the token-shifted
+input (the RWKV6 novelty vs RWKV5's static decay).
+
+TPU adaptation: exact CHUNKED evaluation. Inside a chunk all decay factors
+appear only as exp(clog_t - clog_s) with t >= s, which is <= 1 — so the
+(Q, Q, K) decay tensor is numerically safe without clamping (the factored
+r~ = r exp(c), k~ = k exp(-c) trick used by GLA-style kernels overflows for
+strong decay). Chunk of 16 keeps the tensor small while cutting sequential
+steps 16x vs a token scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import FULL_BATCH, constrain
+
+from .layers import dense_init, rms_norm
+
+import os
+
+_CHUNK = int(os.environ.get("REPRO_RWKV_CHUNK", "16"))
+_LORA = 64
+
+
+def rwkv6_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hk = cfg.head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": (0.5 * jnp.ones((5, d), jnp.float32)).astype(dtype),  # r,k,v,g,w shifts
+        "wr": dense_init(ks[0], d, h * hk, dtype),
+        "wk": dense_init(ks[1], d, h * hk, dtype),
+        "wv": dense_init(ks[2], d, h * hk, dtype),
+        "wg": dense_init(ks[3], d, h * hk, dtype),
+        "w_base": jnp.full((h * hk,), -0.6, jnp.float32),
+        "w_lora_a": dense_init(ks[4], d, _LORA, dtype),
+        "w_lora_b": dense_init(ks[5], _LORA, h * hk, dtype, scale=0.01),
+        "u_bonus": jnp.zeros((h, hk), jnp.float32),
+        "ln_out": jnp.zeros((h * hk,), jnp.float32),
+        "wo": dense_init(ks[6], h * hk, d, dtype, scale=(h * hk) ** -0.5),
+        # channel-mix
+        "mu_cm": (0.5 * jnp.ones((2, d), jnp.float32)).astype(dtype),
+        "w_cm_r": dense_init(ks[7], d, d, dtype),
+        "w_cm_1": dense_init(ks[8], d, cfg.d_ff, dtype),
+        "w_cm_2": dense_init(ks[9], cfg.d_ff, d, dtype, scale=cfg.d_ff ** -0.5),
+    }
+
+
+def _token_shift(x, last=None):
+    """Previous-token features; ``last`` (B,1,D) carries across calls."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _wkv_chunk(carry, inp):
+    """carry S (B,H,K,V) fp32; inp r,k,v (B,Q,H,K|V), logw (B,Q,H,K), u (H,K)."""
+    s_prev = carry
+    r, k, v, logw, u = inp
+    b, q, h, kd = r.shape
+    clog = jnp.cumsum(logw, axis=1)                        # (B,Q,H,K)
+    cshift = jnp.pad(clog, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :q]  # clog_{t-1}
+    # intra: A[t,s] = sum_K r_t exp(c_{t-1} - c_s) k_s   (strictly s < t)
+    dten = cshift[:, :, None] - clog[:, None, :, :]        # (B,Q,Q,H,K) t,s
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    dten = jnp.where(mask[None, :, :, None, None], jnp.exp(dten), 0.0)
+    amat = jnp.einsum("bthk,bshk,btshk->bhts", r.astype(jnp.float32),
+                      k.astype(jnp.float32), dten)
+    y = jnp.einsum("bhts,bshv->bthv", amat, v.astype(jnp.float32))
+    # diagonal u-bonus: y_t += (r_t . (u*k_t)) v_t
+    diag = jnp.einsum("bthk,hk,bthk->bth", r.astype(jnp.float32), u,
+                      k.astype(jnp.float32))
+    y = y + diag[..., None] * v.astype(jnp.float32)
+    # inter: y_t += (r_t * exp(c_{t-1})) S_prev
+    y = y + jnp.einsum("bthk,bhkv->bthv",
+                       r.astype(jnp.float32) * jnp.exp(cshift), s_prev)
+    # carry: S = sum_s exp(c_last - c_s) k_s v_s + exp(c_last) S_prev
+    wtail = jnp.exp(clog[:, -1:, :, :] - clog)             # (B,Q,H,K)
+    s_new = jnp.einsum("bshk,bshv->bhkv", k.astype(jnp.float32) * wtail,
+                       v.astype(jnp.float32))
+    s_new = s_new + jnp.exp(clog[:, -1])[..., None] * s_prev
+    return s_new, y
+
+
+def _heads(x, h, hk):
+    return x.reshape(x.shape[0], x.shape[1], h, hk)
+
+
+def rwkv6_time_mix(params, x, cfg, state=None, last_tok=None):
+    b, s, d = x.shape
+    h, hk = cfg.n_heads, cfg.head_dim
+    dtype = x.dtype
+    xs = _token_shift(x, last_tok)
+    mix = lambda i: x + params["mu"][i] * (xs - x)
+    r = _heads(mix(0) @ params["wr"], h, hk)
+    k = _heads(mix(1) @ params["wk"], h, hk)
+    v = _heads(mix(2) @ params["wv"], h, hk)
+    g = jax.nn.silu(mix(3) @ params["wg"])
+    wx = mix(4)
+    wlog = params["w_base"] + (jnp.tanh(wx @ params["w_lora_a"]) @ params["w_lora_b"]).astype(jnp.float32)
+    logw = -jnp.exp(wlog)                                  # (B,S,H*K) < 0
+    logw = _heads(logw, h, hk)
+
+    if state is None:
+        state = jnp.zeros((b, h, hk, hk), jnp.float32)
+    if s > 1:
+        # The recurrence has no TP dimension (40 heads don't divide a
+        # 16-way axis; K/V are tiny). Without constraints XLA replicates
+        # the whole wkv scan across 'model' — measured as THE dominant
+        # memory term of the rwkv6 train cell. Batch over every mesh axis
+        # instead (context-parallel for recurrent blocks); `constrain`
+        # falls back to a prefix when the batch doesn't divide all axes.
+        cst = lambda a: constrain(a, FULL_BATCH, *([None] * (a.ndim - 1)))
+        r, k, v, logw = cst(r), cst(k), cst(v), cst(logw)
+        g = cst(g)
+        state = cst(state)
+    q = min(_CHUNK, s)
+    pad = (-s) % q
+    if pad:
+        # zero k (no state additions) + zero logw (no decay) => padded steps
+        # are exact no-ops on the recurrence.
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    nc = (s + pad) // q
+    resh = lambda a: a.reshape((b, nc, q) + a.shape[2:]).transpose(1, 0, 2, 3, 4)
+    u = params["u_bonus"]
+    state, y = jax.lax.scan(
+        lambda c, i: _wkv_chunk(c, (*i, u)), state,
+        (resh(r), resh(k), resh(v), resh(logw)),
+    )
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s + pad, h * hk)[:, :s].astype(dtype)
+    y = rms_norm(y, params["ln_out"], cfg.norm_eps) * g
+    return y @ params["wo"], state, x[:, -1:]
+
+
+def rwkv6_time_mix_decode(params, x, cfg, state, last_tok):
+    """One-token step: x (B,1,D). Returns (y, new_state, new_last)."""
+    b = x.shape[0]
+    h, hk = cfg.n_heads, cfg.head_dim
+    xs = last_tok
+    mix = lambda i: x + params["mu"][i] * (xs - x)
+    r = _heads(mix(0) @ params["wr"], h, hk)[:, 0]         # (B,H,K)
+    k = _heads(mix(1) @ params["wk"], h, hk)[:, 0]
+    v = _heads(mix(2) @ params["wv"], h, hk)[:, 0]
+    g = jax.nn.silu(mix(3) @ params["wg"])
+    wlog = params["w_base"] + (jnp.tanh(mix(4) @ params["w_lora_a"]) @ params["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, h, hk)
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   state + params["u_bonus"][None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    y = y.reshape(b, 1, h * hk).astype(x.dtype)
+    y = rms_norm(y, params["ln_out"], cfg.norm_eps) * g
+    return y @ params["wo"], state, x
+
+
+def rwkv6_channel_mix(params, x, cfg, last_tok=None):
+    xs = _token_shift(x, last_tok)
+    xk = x + params["mu_cm"][0] * (xs - x)
+    xr = x + params["mu_cm"][1] * (xs - x)
+    r = jax.nn.sigmoid(xr @ params["w_cm_r"])
+    k = jnp.square(jax.nn.relu(xk @ params["w_cm_1"]))
+    return r * (k @ params["w_cm_2"]), x[:, -1:]

@@ -1,0 +1,160 @@
+"""Mamba-2 (SSD) block — chunked state-space dual form, TPU-friendly.
+
+Recurrence (per head h, headdim P, state N):
+    h_t = a_t * h_{t-1} + (dt_t x_t) B_t^T        a_t = exp(-exp(A_log) dt_t)
+    y_t = C_t h_t + D x_t
+The chunked form turns the scan into (Q x Q) matmuls per chunk — decay is
+a SCALAR per (step, head), so the intra-chunk decay matrix is cheap (this
+is exactly why Mamba-2 maps better to matrix units than RWKV's per-channel
+decay; see rwkv6.py).
+
+Simplifications vs the reference CUDA impl (recorded in DESIGN.md):
+single B/C group (G=1), short conv applied to x only, gated RMSNorm as
+norm(y) * silu(z).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import FULL_BATCH, constrain
+
+from .layers import dense_init, rms_norm
+
+_CHUNK = 128
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d, di, dtype),
+        "wx": dense_init(ks[1], d, di, dtype),
+        "wB": dense_init(ks[2], d, n, dtype),
+        "wC": dense_init(ks[3], d, n, dtype),
+        "wdt": dense_init(ks[4], d, h, dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (cfg.ssm_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "wo": dense_init(ks[6], di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via K shifted adds. x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def _ssd_chunk(carry, inp, heads, p_dim):
+    """One SSD chunk. carry: h (B,H,P,N). inp: xbar (B,Q,H,P), Bc/Cc (B,Q,N),
+    loga (B,Q,H)."""
+    h_prev = carry
+    xbar, bc, cc, loga = inp
+    clog = jnp.cumsum(loga, axis=1)                     # (B,Q,H) inclusive
+    # intra-chunk: y[t] = sum_{s<=t} (C_t . B_s) exp(clog_t - clog_s) xbar_s
+    gt = jnp.einsum("btn,bsn->bts", cc, bc)             # (B,Q,Q)
+    dmat = clog[:, :, None, :] - clog[:, None, :, :]    # (B,Q,Q,H) t,s
+    q = loga.shape[1]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    dmat = jnp.where(causal[None, :, :, None], jnp.exp(dmat), 0.0)
+    y_intra = jnp.einsum("bts,btsh,bshp->bthp", gt.astype(jnp.float32),
+                         dmat, xbar.astype(jnp.float32))
+    # inter-chunk: y[t] += exp(clog_t) * C_t h_prev
+    y_inter = jnp.einsum("btn,bhpn->bthp", cc.astype(jnp.float32), h_prev)
+    y_inter = y_inter * jnp.exp(clog)[..., None]
+    # carry: h_end = sum_s exp(clog_last - clog_s) xbar_s B_s + exp(clog_last) h_prev
+    wdecay = jnp.exp(clog[:, -1:, :] - clog)            # (B,Q,H)
+    h_new = jnp.einsum("bqh,bqhp,bqn->bhpn", wdecay, xbar.astype(jnp.float32),
+                       bc.astype(jnp.float32))
+    h_new = h_new + jnp.exp(clog[:, -1])[:, :, None, None] * h_prev
+    return h_new, (y_intra + y_inter)
+
+
+def mamba2_forward(params, x, cfg, state=None):
+    """x (B,S,D) -> (y (B,S,D), final ssd state (B,H,P,N)).
+
+    ``state`` is the initial SSD state (decode-prefill continuity); conv
+    state handling for step-decode lives in mamba2_decode.
+    """
+    b, s, _ = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dtype = x.dtype
+    z = x @ params["wz"]
+    xr = jax.nn.silu(_causal_conv(x @ params["wx"], params["conv_w"]))
+    bproj = x @ params["wB"]
+    cproj = x @ params["wC"]
+    dt = jax.nn.softplus((x @ params["wdt"]).astype(jnp.float32)
+                         + params["dt_bias"])           # (B,S,H)
+    loga = -jnp.exp(params["A_log"]) * dt               # (B,S,H) in (-inf,0)
+
+    xh = xr.reshape(b, s, h, p)
+    xbar = xh * dt[..., None].astype(dtype)
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+    if s > 1:
+        # Same rationale as rwkv6: the SSD scan has no TP dimension (the
+        # state is per-head and tiny) — batch over every mesh axis, or
+        # XLA replicates the whole chunk scan across 'model'.
+        cst = lambda a: constrain(a, FULL_BATCH, *([None] * (a.ndim - 1)))
+        xbar, bproj, cproj, loga = cst(xbar), cst(bproj), cst(cproj), cst(loga)
+        state = cst(state)
+
+    q = min(_CHUNK, s)
+    pad = (-s) % q
+    if pad:
+        # zero xbar/B (no state additions) + zero loga (no decay) => no-ops.
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xbar, bproj, cproj, loga = zpad(xbar), zpad(bproj), zpad(cproj), zpad(loga)
+    nc = (s + pad) // q
+    resh = lambda a: a.reshape((b, nc, q) + a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    xs = (resh(xbar), resh(bproj), resh(cproj), resh(loga))
+    state, y = jax.lax.scan(lambda c, i: _ssd_chunk(c, i, h, p), state, xs)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s + pad, h, p)[:, :s]
+    y = y + params["D_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, -1).astype(dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["wo"], state
+
+
+def mamba2_init_cache(cfg, batch, dtype):
+    return {
+        "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba2_decode(params, x, cache, cfg):
+    """Single-token step. x (B,1,D) -> (y (B,1,D), new cache)."""
+    b = x.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dtype = x.dtype
+    z = x @ params["wz"]
+    xp = x @ params["wx"]                               # (B,1,di)
+    window = jnp.concatenate([cache["conv"], xp], axis=1)   # (B,K,di)
+    xr = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, params["conv_w"]))[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    bproj = x @ params["wB"]                            # (B,1,N)
+    cproj = x @ params["wC"]
+    dt = jax.nn.softplus((x @ params["wdt"]).astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt)         # (B,1,H)
+
+    xh = xr.reshape(b, h, p)
+    xbar = (xh * dt[:, 0, :, None].astype(dtype)).astype(jnp.float32)
+    ssd = cache["ssd"] * a[:, 0, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xbar, bproj[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cproj[:, 0].astype(jnp.float32), ssd)
+    y = y + params["D_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, -1).astype(dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["wo"], {"ssd": ssd, "conv": new_conv}

@@ -1,0 +1,399 @@
+"""Decoder assembly: scan-over-layers blocks for all five family patterns.
+
+* uniform attention stacks (musicgen / internlm2 / minitron / mistral /
+  chameleon) — window 0 (global);
+* gemma2 — per-layer window array scanned alongside params (local/global
+  alternation lives INSIDE one scan), attn softcap, sandwich norms;
+* MoE stacks (dbrx / qwen2-moe) — attention + grouped-dispatch MoE;
+* rwkv6 — time-mix + channel-mix, attention-free;
+* zamba2 hybrid — groups of ``attn_every`` mamba2 layers followed by ONE
+  SHARED attention block (weights reused every group, its KV cache is
+  per-application).
+
+Per-layer parameters are stacked on a leading axis; compile time is
+independent of depth. Caches are stacked the same way and travel through
+scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import BATCH, constrain
+
+from .attention import (
+    _expand_kv, attn_init, attention, attention_decode, cache_expand_factor,
+)
+
+# Megatron sequence-parallelism: residual-stream activations at block
+# boundaries are sharded over ('model', seq). XLA then reduce-scatters the
+# row-parallel matmul outputs and all-gathers before the next column-
+# parallel input, and every norm/residual elementwise pass runs on 1/tp of
+# the tokens. A/B switch for §Perf.
+_SEQ_PARALLEL = os.environ.get("REPRO_NO_SEQPAR", "") != "1"
+
+
+def _residual_sp(x, cfg):
+    """(B, S, D) residual constraint at block boundaries (train/prefill).
+
+    Skipped for MoE blocks: the expert dispatch needs a different layout
+    and the seq-sharded residual just adds reshards around it (measured:
+    dbrx train dominant term 26.1 -> 32.9 s with SP on — refuted there,
+    confirmed for dense blocks)."""
+    if not _SEQ_PARALLEL or x.shape[1] == 1 or cfg.n_experts:
+        return x
+    return constrain(x, BATCH, "model", None)
+from .layers import mlp_apply, mlp_init, rms_norm, swiglu
+from .moe import moe_forward, moe_init
+from .rwkv6 import (
+    rwkv6_channel_mix, rwkv6_init, rwkv6_time_mix, rwkv6_time_mix_decode,
+)
+from .ssm import mamba2_decode, mamba2_forward, mamba2_init, mamba2_init_cache
+
+
+def padded_experts(cfg, tp: int = 1) -> int:
+    """Pad expert count up to a multiple of the model-axis size."""
+    if not cfg.n_experts:
+        return 0
+    return ((cfg.n_experts + tp - 1) // tp) * tp
+
+
+# ---------------------------------------------------------------- init ----
+
+def _norm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def attn_block_init(key, cfg, dtype, tp: int = 1):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": _norm(cfg.d_model), "attn": attn_init(k1, cfg, dtype),
+         "ln2": _norm(cfg.d_model)}
+    if cfg.n_experts:
+        p["moe"] = moe_init(k2, cfg, dtype, padded_experts(cfg, tp))
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_kind)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = _norm(cfg.d_model)
+        p["ln2_post"] = _norm(cfg.d_model)
+    return p
+
+
+def mamba_block_init(key, cfg, dtype):
+    return {"ln1": _norm(cfg.d_model), "mamba": mamba2_init(key, cfg, dtype)}
+
+
+def rwkv_block_init(key, cfg, dtype):
+    return {"ln1": _norm(cfg.d_model), "ln2": _norm(cfg.d_model),
+            "rwkv": rwkv6_init(key, cfg, dtype)}
+
+
+def stack_init(key, cfg, dtype, tp: int = 1):
+    """Stacked per-layer params (+ shared attention block for hybrids)."""
+    if cfg.block_kind == "attn":
+        init_one = functools.partial(attn_block_init, cfg=cfg, dtype=dtype, tp=tp)
+        n = cfg.n_layers
+    elif cfg.block_kind == "mamba2":
+        init_one = functools.partial(mamba_block_init, cfg=cfg, dtype=dtype)
+        n = cfg.n_layers
+    elif cfg.block_kind == "rwkv6":
+        init_one = functools.partial(rwkv_block_init, cfg=cfg, dtype=dtype)
+        n = cfg.n_layers
+    else:
+        raise ValueError(cfg.block_kind)
+    keys = jax.random.split(key, n + 1)
+    stacked = jax.vmap(lambda k: init_one(k))(keys[:n])
+    out = {"layers": stacked}
+    if cfg.attn_every:
+        out["shared_attn"] = attn_block_init(keys[n], cfg, dtype, tp)
+    return out
+
+
+def layer_windows(cfg):
+    """Per-layer sliding-window scalars for the scan (0 = global attn)."""
+    if cfg.local_global and cfg.sliding_window:
+        pat = [cfg.sliding_window if i % 2 == 0 else 0 for i in range(cfg.n_layers)]
+    elif cfg.sliding_window:
+        pat = [cfg.sliding_window] * cfg.n_layers
+    else:
+        pat = [0] * cfg.n_layers
+    return jnp.asarray(pat, jnp.int32)
+
+
+# ------------------------------------------------------------- forward ----
+
+def _attn_block_fwd(p, x, cfg, window, positions, tp):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = attention(p["attn"], h, cfg, window=window, positions=positions)
+    if cfg.sandwich_norm:
+        h = rms_norm(h, p["ln1_post"], cfg.norm_eps)
+    x = _residual_sp(x + h, cfg)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        h, aux = moe_forward(p["moe"], h, cfg, padded_experts(cfg, tp))
+    else:
+        h, aux = mlp_apply(p["mlp"], h, cfg.mlp_kind), 0.0
+    if cfg.sandwich_norm:
+        h = rms_norm(h, p["ln2_post"], cfg.norm_eps)
+    return _residual_sp(x + h, cfg), aux
+
+
+def forward_train(params, x, cfg, positions, tp: int = 1):
+    """x (B,S,D) embeddings -> hidden (B,S,D); returns (hidden, aux_loss).
+
+    With ``cfg.remat`` each scan-layer body is wrapped in jax.checkpoint:
+    the backward pass recomputes per-layer activations instead of saving
+    O(L) residuals — the standard activation-checkpoint policy that makes
+    train_4k fit at production batch sizes.
+    """
+    wins = layer_windows(cfg)
+    ckpt = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    if cfg.block_kind == "attn":
+        @ckpt
+        def body(carry, pw):
+            x, aux = carry
+            p, w = pw
+            x, a = _attn_block_fwd(p, x, cfg, w, positions, tp)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), (params["layers"], wins))
+        return x, aux
+
+    if cfg.block_kind == "rwkv6":
+        @ckpt
+        def body(x, p):
+            h, _, _ = rwkv6_time_mix(p["rwkv"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+            x = x + h
+            h, _ = rwkv6_channel_mix(p["rwkv"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+            return x + h, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, 0.0
+
+    if cfg.block_kind == "mamba2":
+        if cfg.attn_every:
+            return _hybrid_train(params, x, cfg, positions, wins, tp)
+        @ckpt
+        def body(x, p):
+            h, _ = mamba2_forward(p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+            return x + h, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, 0.0
+
+    raise ValueError(cfg.block_kind)
+
+
+def _hybrid_train(params, x, cfg, positions, wins, tp):
+    """zamba2: groups of attn_every mamba layers + shared attention."""
+    g = cfg.n_layers // cfg.attn_every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]), params["layers"]
+    )
+    shared = params["shared_attn"]
+    ckpt = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    @ckpt
+    def group_body(x, gp):
+        def inner(x, p):
+            h, _ = mamba2_forward(p["mamba"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+            return x + h, None
+        x, _ = jax.lax.scan(inner, x, gp)
+        x, _ = _attn_block_fwd(shared, x, cfg, jnp.int32(0), positions, tp)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    return x, 0.0
+
+
+# -------------------------------------------------------------- prefill ----
+
+def prefill(params, x, cfg, positions, cache_len: int, tp: int = 1):
+    """Forward over the prompt, building the decode cache.
+
+    Returns (hidden (B,S,D), cache pytree). Attention K/V are written into
+    length-``cache_len`` buffers.
+    """
+    b, s, _ = x.shape
+    wins = layer_windows(cfg)
+    dtype = x.dtype
+
+    def pad_kv(kv):
+        return jnp.zeros((b, cache_len) + kv.shape[2:], dtype).at[:, :s].set(kv)
+
+    if cfg.block_kind == "attn":
+        r_exp = cache_expand_factor(cfg, tp)
+
+        def body(x, pw):
+            p, w = pw
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            hd = cfg.head_dim
+            from .attention import _split_heads
+            from .layers import apply_rope
+            k = apply_rope(_split_heads(h @ p["attn"]["wk"], cfg.n_kv_heads, hd),
+                           positions, cfg.rope_theta)
+            v = _split_heads(h @ p["attn"]["wv"], cfg.n_kv_heads, hd)
+            if r_exp > 1:  # head-shardable decode cache (see cache_expand_factor)
+                k, v = _expand_kv(k, r_exp), _expand_kv(v, r_exp)
+            x, _ = _attn_block_fwd(p, x, cfg, w, positions, tp)
+            return x, (pad_kv(k), pad_kv(v))
+        x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], wins))
+        return x, {"k": ck, "v": cv, "pos": jnp.int32(s)}
+
+    if cfg.block_kind == "rwkv6":
+        def body(x, p):
+            h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, wkv_state, last1 = rwkv6_time_mix(p["rwkv"], h1, cfg)
+            x = x + h
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            h, last2 = rwkv6_channel_mix(p["rwkv"], h2, cfg)
+            return x + h, (wkv_state, last1, last2)
+        x, (wkv, l1, l2) = jax.lax.scan(body, x, params["layers"])
+        return x, {"wkv": wkv, "last1": l1, "last2": l2, "pos": jnp.int32(s)}
+
+    if cfg.block_kind == "mamba2":
+        kconv = cfg.ssm_conv - 1
+        if cfg.attn_every:
+            g = cfg.n_layers // cfg.attn_every
+            grouped = jax.tree.map(
+                lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]), params["layers"])
+            shared = params["shared_attn"]
+
+            def group_body(x, gp):
+                def inner(x, p):
+                    h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+                    h, st = mamba2_forward(p["mamba"], h1, cfg)
+                    conv_tail = jnp.pad(h1 @ p["mamba"]["wx"], ((0, 0), (kconv, 0), (0, 0)))[:, s : s + kconv]
+                    return x + h, (st, conv_tail)
+                x, (ssd, conv) = jax.lax.scan(inner, x, gp)
+                h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                from .attention import _split_heads
+                from .layers import apply_rope
+                hd = cfg.head_dim
+                k = apply_rope(_split_heads(h @ shared["attn"]["wk"], cfg.n_kv_heads, hd),
+                               positions, cfg.rope_theta)
+                v = _split_heads(h @ shared["attn"]["wv"], cfg.n_kv_heads, hd)
+                x, _ = _attn_block_fwd(shared, x, cfg, jnp.int32(0), positions, tp)
+                return x, (ssd, conv, pad_kv(k), pad_kv(v))
+
+            x, (ssd, conv, ck, cv) = jax.lax.scan(group_body, x, grouped)
+            return x, {"ssd": ssd, "conv": conv, "k": ck, "v": cv, "pos": jnp.int32(s)}
+
+        def body(x, p):
+            h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, st = mamba2_forward(p["mamba"], h1, cfg)
+            conv_tail = jnp.pad(h1 @ p["mamba"]["wx"], ((0, 0), (kconv, 0), (0, 0)))[:, s : s + kconv]
+            return x + h, (st, conv_tail)
+        x, (ssd, conv) = jax.lax.scan(body, x, params["layers"])
+        return x, {"ssd": ssd, "conv": conv, "pos": jnp.int32(s)}
+
+    raise ValueError(cfg.block_kind)
+
+
+# --------------------------------------------------------------- decode ----
+
+def decode_step(params, x, cfg, cache, tp: int = 1):
+    """One-token decode. x (B,1,D). Returns (hidden (B,1,D), new cache)."""
+    pos = cache["pos"]
+    wins = layer_windows(cfg)
+
+    if cfg.block_kind == "attn":
+        def body(x, pwc):
+            p, w, ck, cv = pwc
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, ck, cv = attention_decode(p["attn"], h, ck, cv, pos, cfg, window=w)
+            if cfg.sandwich_norm:
+                h = rms_norm(h, p["ln1_post"], cfg.norm_eps)
+            x = x + h
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                h, _ = moe_forward(p["moe"], h, cfg, padded_experts(cfg, tp))
+            else:
+                h = mlp_apply(p["mlp"], h, cfg.mlp_kind)
+            if cfg.sandwich_norm:
+                h = rms_norm(h, p["ln2_post"], cfg.norm_eps)
+            return x + h, (ck, cv)
+        x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], wins, cache["k"], cache["v"]))
+        return x, {"k": ck, "v": cv, "pos": pos + 1}
+
+    if cfg.block_kind == "rwkv6":
+        def body(x, pc):
+            p, wkv, l1, l2 = pc
+            h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, wkv, l1 = rwkv6_time_mix_decode(p["rwkv"], h1, cfg, wkv, l1)
+            x = x + h
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            hcm, l2n = rwkv6_channel_mix(p["rwkv"], h2, cfg, last_tok=l2)
+            return x + hcm, (wkv, l1, l2n)
+        x, (wkv, l1, l2) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["last1"], cache["last2"]))
+        return x, {"wkv": wkv, "last1": l1, "last2": l2, "pos": pos + 1}
+
+    if cfg.block_kind == "mamba2":
+        if cfg.attn_every:
+            g = cfg.n_layers // cfg.attn_every
+            grouped = jax.tree.map(
+                lambda a: a.reshape((g, cfg.attn_every) + a.shape[1:]), params["layers"])
+            shared = params["shared_attn"]
+
+            def group_body(x, gc):
+                gp, ssd, conv, ck, cv = gc
+                def inner(x, pc):
+                    p, st, cs = pc
+                    h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+                    h, newc = mamba2_decode(p["mamba"], h1, {"ssd": st, "conv": cs}, cfg)
+                    return x + h, (newc["ssd"], newc["conv"])
+                x, (ssd, conv) = jax.lax.scan(inner, x, (gp, ssd, conv))
+                h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                h, ck, cv = attention_decode(shared["attn"], h, ck, cv, pos, cfg, window=jnp.int32(0))
+                x = x + h
+                h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+                h = mlp_apply(shared["mlp"], h, cfg.mlp_kind)
+                return x + h, (ssd, conv, ck, cv)
+
+            x, (ssd, conv, ck, cv) = jax.lax.scan(
+                group_body, x, (grouped, cache["ssd"], cache["conv"], cache["k"], cache["v"]))
+            return x, {"ssd": ssd, "conv": conv, "k": ck, "v": cv, "pos": pos + 1}
+
+        def body(x, pc):
+            p, st, cs = pc
+            h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, newc = mamba2_decode(p["mamba"], h1, {"ssd": st, "conv": cs}, cfg)
+            return x + h, (newc["ssd"], newc["conv"])
+        x, (ssd, conv) = jax.lax.scan(body, x, (params["layers"], cache["ssd"], cache["conv"]))
+        return x, {"ssd": ssd, "conv": conv, "pos": pos + 1}
+
+    raise ValueError(cfg.block_kind)
+
+
+def init_cache(params, cfg, batch, cache_len, dtype, tp: int = 1):
+    """Empty decode cache (for decode-shape dry-runs without a prefill)."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    hkv *= cache_expand_factor(cfg, tp)
+    if cfg.block_kind == "attn":
+        kv = jnp.zeros((cfg.n_layers, batch, cache_len, hkv, hd), dtype)
+        return {"k": kv, "v": kv, "pos": jnp.int32(cache_len - 1)}
+    if cfg.block_kind == "rwkv6":
+        return {
+            "wkv": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, hd, hd), jnp.float32),
+            "last1": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+            "last2": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+            "pos": jnp.int32(cache_len - 1),
+        }
+    if cfg.block_kind == "mamba2":
+        n_m = cfg.n_layers
+        base = {
+            "ssd": jnp.zeros((n_m, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((n_m, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "pos": jnp.int32(cache_len - 1),
+        }
+        if cfg.attn_every:
+            g = cfg.n_layers // cfg.attn_every
+            base["ssd"] = base["ssd"].reshape((g, cfg.attn_every) + base["ssd"].shape[1:])
+            base["conv"] = base["conv"].reshape((g, cfg.attn_every) + base["conv"].shape[1:])
+            kv = jnp.zeros((g, batch, cache_len, hkv, hd), dtype)
+            base["k"] = kv
+            base["v"] = kv
+        return base
+    raise ValueError(cfg.block_kind)

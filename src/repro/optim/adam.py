@@ -1,0 +1,61 @@
+"""Adam/AdamW over arbitrary pytrees (no optax in this environment).
+
+Moments are kept in fp32 regardless of parameter dtype (mixed-precision
+training keeps bf16 params + fp32 optimizer state, the standard large-scale
+recipe).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: object   # pytree like params, fp32
+    nu: object   # pytree like params, fp32
+
+
+def _f32(t):
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+
+
+def adam_init(params) -> AdamState:
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=_f32(params), nu=_f32(params))
+
+
+def adam_update(
+    grads, state: AdamState, params,
+    lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """Returns (new_params, new_state). ``lr`` may be a scalar or schedule value."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * (g32 * g32)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+def adamw_update(grads, state, params, lr, weight_decay=0.1, **kw):
+    return adam_update(grads, state, params, lr, weight_decay=weight_decay, **kw)

@@ -1,0 +1,5 @@
+from .rules import (
+    batch_spec, cache_specs, dp_axes, fsdp_axes, param_specs, tp_size,
+)
+
+__all__ = ["batch_spec", "cache_specs", "dp_axes", "fsdp_axes", "param_specs", "tp_size"]

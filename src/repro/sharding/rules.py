@@ -1,0 +1,160 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for any mesh.
+
+Strategy (1000+-node posture, DESIGN.md §5):
+* batch (DP) over ('pod', 'data');
+* FSDP/ZeRO-3: the weight's input-feature dim shards over ('pod', 'data')
+  — XLA inserts per-layer all-gathers inside the layer scan;
+* TP (Megatron column/row) over 'model': output features of in-projections,
+  input features of out-projections;
+* EP: MoE expert dim over 'model' (experts pre-padded to divide it);
+* every rule checks divisibility and falls back to replication, so the same
+  table serves 512-device production meshes and 8-device test meshes.
+
+Rules match parameter NAME (leaf dict key) + tensor RANK (stacked-layer
+params carry a leading L axis; MoE expert weights carry L and E axes).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """axes if they divide dim, else None (replicate)."""
+    if axes is None or dim % _axsize(mesh, axes) != 0:
+        return None
+    return axes if not (isinstance(axes, tuple) and len(axes) == 1) else axes[0]
+
+
+# name -> role table
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "wr", "wk", "wv", "wg", "wz", "wx",
+        "w_cm_1", "w_cm_r", "lm_head"}
+_ROW = {"wo", "w_down", "w_cm_2"}
+_SMALL_COL = {"wB", "wC", "wdt", "w_lora_a", "router"}
+
+
+def _spec_for(name: str, shape: tuple, mesh: Mesh) -> P:
+    f = fsdp_axes(mesh) or None
+    rank = len(shape)
+
+    if name == "embed":  # (V, D)
+        return P(_fit(mesh, shape[0], "model"), _fit(mesh, shape[1], f))
+
+    if name in _COL:
+        if rank == 2:    # (Din, Dout) e.g. lm_head
+            return P(_fit(mesh, shape[0], f), _fit(mesh, shape[1], "model"))
+        if rank == 3:    # (L, Din, Dout)
+            return P(None, _fit(mesh, shape[1], f), _fit(mesh, shape[2], "model"))
+        if rank == 4:    # (L, E, Din, Dout) MoE experts
+            return P(None, _fit(mesh, shape[1], "model"), _fit(mesh, shape[2], f), None)
+
+    if name in _ROW:
+        if rank == 2:
+            return P(_fit(mesh, shape[0], "model"), _fit(mesh, shape[1], f))
+        if rank == 3:
+            return P(None, _fit(mesh, shape[1], "model"), _fit(mesh, shape[2], f))
+        if rank == 4:
+            return P(None, _fit(mesh, shape[1], "model"), None, _fit(mesh, shape[3], f))
+
+    if name in _SMALL_COL and rank >= 2:
+        # (L, Din, small) — shard the big input dim only
+        return P(*([None] * (rank - 2)), _fit(mesh, shape[-2], f), None)
+
+    if name == "w_lora_b" and rank == 3:   # (L, lora, Dout)
+        return P(None, None, _fit(mesh, shape[2], "model"))
+
+    if name == "conv_w" and rank == 3:     # (L, K, d_inner)
+        return P(None, None, _fit(mesh, shape[2], "model"))
+
+    return P(*([None] * rank))             # norms, scalars, mu, biases...
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpecs matching ``params`` (works on shape trees)."""
+
+    def one(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        return _spec_for(name or "", tuple(leaf.shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    dp = dp_axes(mesh)
+    if not dp or global_batch % _axsize(mesh, dp) != 0:
+        return P(None, None)
+    return P(dp, None)
+
+
+def cache_specs(cache, mesh: Mesh) -> object:
+    """Decode-cache PartitionSpecs: batch over DP when divisible; heads (or
+    failing that, sequence) over 'model'."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        rank = len(shape)
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        if rank == 0:
+            return P()
+        if name in ("k", "v"):
+            # (L_or_G, B, S, Hkv, hd)
+            b = _fit(mesh, shape[1], dp or None)
+            h = _fit(mesh, shape[3], "model")
+            s = None if h is not None else _fit(mesh, shape[2], "model")
+            return P(None, b, s, h, None)
+        if name == "ssd":
+            # (... , B, H, P, N) - batch over dp, heads over model
+            lead = rank - 4
+            b = _fit(mesh, shape[-4], dp or None)
+            h = _fit(mesh, shape[-3], "model")
+            return P(*([None] * lead), b, h, None, None)
+        if name == "conv":
+            lead = rank - 3
+            b = _fit(mesh, shape[-3], dp or None)
+            c = _fit(mesh, shape[-1], "model")
+            return P(*([None] * lead), b, None, c)
+        if name == "wkv":
+            # (L, B, H, K, V)
+            b = _fit(mesh, shape[1], dp or None)
+            h = _fit(mesh, shape[2], "model")
+            return P(None, b, h, None, None)
+        if name in ("last1", "last2"):
+            b = _fit(mesh, shape[1], dp or None)
+            d = _fit(mesh, shape[3], "model")
+            return P(None, b, None, d)
+        # pos etc.
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,2 @@
+from .train_step import TrainState, make_train_step, train_state_init
+from .serve import make_decode_step, make_prefill_step

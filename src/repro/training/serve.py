@@ -1,0 +1,39 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token).
+
+These are the functions the decode_32k / long_500k dry-run cells lower:
+``serve_step`` consumes one new token against a KV cache of length seq_len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import make_empty_cache, prefill_step, serve_step
+
+
+def make_prefill_step(cfg, cache_len: int, tp: int = 1):
+    def step(params, tokens):
+        return prefill_step(params, tokens, cfg, cache_len, tp=tp)
+
+    return step
+
+
+def make_decode_step(cfg, tp: int = 1):
+    def step(params, tokens, cache):
+        logits, cache = serve_step(params, tokens, cache, cfg, tp=tp)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+
+    return step
+
+
+def greedy_generate(params, prompt, cfg, max_new: int, cache_len: int, tp: int = 1):
+    """Reference autoregressive loop (smoke tests / examples, not perf path)."""
+    logits, cache = prefill_step(params, prompt, cfg, cache_len, tp=tp)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    decode = make_decode_step(cfg, tp)
+    for _ in range(max_new - 1):
+        tok, _, cache = decode(params, tok, cache)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

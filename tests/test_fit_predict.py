@@ -1,0 +1,101 @@
+"""MLE fit + prediction behaviour on synthetic data."""
+import numpy as np
+import pytest
+
+from repro.core import KernelParams, SBVConfig
+from repro.core.fit import fit_neldermead, fit_sbv
+from repro.core.predict import mspe, predict_sbv, rmspe
+from repro.data.gp_sim import (
+    metarvm_dataset, metarvm_simulate, paper_synthetic, sample_gp_exact, sample_gp_rff,
+    satellite_drag_like,
+)
+
+
+def test_fit_improves_loglik_and_recovers_scale():
+    x, y, true_params = paper_synthetic(seed=0, n=400, d=4)
+    cfg = SBVConfig(n_blocks=40, m=24, seed=0)
+    res = fit_sbv(x, y, cfg, inner_steps=40, outer_rounds=2, lr=0.1)
+    losses = [h[2] for h in res.history]
+    assert losses[-1] < losses[0] - 0.1, (losses[0], losses[-1])
+    # variance within a factor ~3 of truth
+    assert 0.3 < float(res.params.sigma2) < 3.5
+
+
+def test_fit_identifies_relevant_dimensions():
+    """Relevant dims (small beta) should get much larger 1/beta than noise dims."""
+    x, y, _ = paper_synthetic(seed=1, n=500, d=6)
+    cfg = SBVConfig(n_blocks=50, m=30, seed=1)
+    res = fit_sbv(x, y, cfg, inner_steps=80, outer_rounds=2, lr=0.1)
+    inv_beta = 1.0 / np.asarray(res.params.beta)
+    relevant = inv_beta[:2].min()
+    irrelevant = inv_beta[2:].max()
+    assert relevant > 2.0 * irrelevant, inv_beta
+
+
+def test_neldermead_path_runs():
+    x, y, _ = paper_synthetic(seed=2, n=150, d=3)
+    cfg = SBVConfig(n_blocks=15, m=16, seed=2)
+    res = fit_neldermead(x, y, cfg, maxiter=60)
+    assert np.isfinite(res.history[-1][2])
+
+
+def test_predict_interpolates_training_points():
+    x, y, true_params = paper_synthetic(seed=3, n=300, d=3)
+    pred = predict_sbv(true_params, x, y, x[:50], bs_pred=5, m_pred=60, seed=3)
+    # tiny nugget -> near-interpolation at training inputs
+    assert mspe(pred.mean, y[:50]) < 1e-3 * float(np.var(y))
+
+
+def test_predict_beats_mean_baseline_on_heldout():
+    x, y, true_params = paper_synthetic(seed=4, n=600, d=4)
+    xtr, ytr, xte, yte = x[:500], y[:500], x[500:], y[500:]
+    pred = predict_sbv(true_params, xtr, ytr, xte, bs_pred=5, m_pred=60, seed=4)
+    assert mspe(pred.mean, yte) < 0.5 * float(np.var(yte))
+
+
+def test_predict_ci_coverage_reasonable():
+    x, y, true_params = paper_synthetic(seed=5, n=600, d=3)
+    xtr, ytr, xte, yte = x[:500], y[:500], x[500:], y[500:]
+    pred = predict_sbv(true_params, xtr, ytr, xte, bs_pred=5, m_pred=80, seed=5)
+    cover = np.mean((yte >= pred.ci_low) & (yte <= pred.ci_high))
+    assert cover > 0.75, cover
+
+
+def test_rff_draw_matches_exact_covariance_statistics():
+    """RFF sample variance ~ sigma2 and lengthscale structure sane."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(size=(800, 2))
+    params = KernelParams.create(sigma2=2.0, beta=[0.2, 0.2], nugget=1e-8)
+    ys = np.stack([sample_gp_rff(s, x, params, n_features=2048) for s in range(8)])
+    var = ys.var(axis=1).mean()
+    assert 1.2 < var < 3.0, var
+
+
+def test_metarvm_relevance_structure():
+    """dh and dr must barely move the output (paper Fig. 7 finding)."""
+    theta = np.tile(
+        np.array([[0.5, 0.5, 60.0, 3.0, 2.0, 5.0, 5.0, 3.0, 60.0, 0.55]]), (5, 1)
+    )
+    base = metarvm_simulate(theta[:1])[0]
+    hi = theta.copy()
+    hi[0, 7] = 5.0   # dh max
+    hi[1, 8] = 90.0  # dr max
+    hi[2, 0] = 0.9   # ts max
+    hi[3, 6] = 9.0   # ds max
+    out = metarvm_simulate(hi)
+    assert abs(out[0] - base) / base < 0.02   # dh ~ irrelevant
+    assert abs(out[1] - base) / base < 0.10   # dr ~ weak
+    assert abs(out[2] - base) / base > 0.25   # ts ~ strong
+    assert base > 0 and np.all(np.isfinite(out))
+
+
+def test_metarvm_dataset_shapes_and_conservation():
+    x, y = metarvm_dataset(seed=0, n=64)
+    assert x.shape == (64, 10) and y.shape == (64,)
+    assert np.all(x >= 0) and np.all(x <= 1)
+    assert np.all(y >= 0) and abs(y.mean() - 1.0) < 1e-9
+
+
+def test_satdrag_like_shapes():
+    x, y = satellite_drag_like(0, 200)
+    assert x.shape == (200, 8) and np.all(np.isfinite(y))

@@ -1,0 +1,69 @@
+"""Flash-attention kernel vs dense oracle: shape/dtype/mask sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_ref import flash_attention_ref
+
+
+def rand_qkv(key, b, h, s, t, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, s, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, h, t, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, h, t, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 2, 128, 128, 32), (2, 3, 256, 256, 64)])
+def test_matches_ref_causal(dtype, shape):
+    b, h, s, t, hd = shape
+    q, k, v = rand_qkv(jax.random.key(0), b, h, s, t, hd, dtype)
+    got = flash_attention(q, k, v, q_tile=64, k_tile=64, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [0, 64, 17])
+def test_sliding_window(window):
+    q, k, v = rand_qkv(jax.random.key(1), 1, 2, 128, 128, 32, jnp.float32)
+    got = flash_attention(q, k, v, window=window, q_tile=64, k_tile=32,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_softcap():
+    q, k, v = rand_qkv(jax.random.key(2), 1, 2, 128, 128, 32, jnp.float32)
+    got = flash_attention(q, k, v, softcap=30.0, q_tile=64, k_tile=64,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cross_attention_longer_kv():
+    """Decode-like: queries shorter than KV (non-square, non-causal)."""
+    q, k, v = rand_qkv(jax.random.key(3), 2, 2, 64, 512, 32, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, q_tile=64, k_tile=128,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tile_size_invariance():
+    q, k, v = rand_qkv(jax.random.key(4), 1, 1, 256, 256, 64, jnp.float32)
+    a = flash_attention(q, k, v, q_tile=256, k_tile=256, interpret=True)
+    b = flash_attention(q, k, v, q_tile=64, k_tile=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,54 @@
+"""Matern kernel math: scipy oracle cross-check + hypothesis invariants."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import KernelParams, cov_matrix, matern
+from repro.core.kernels_math import matern_scipy_oracle, scaled_sqdist
+
+
+@pytest.mark.parametrize("nu", [0.5, 1.5, 2.5, 3.5])
+def test_closed_form_matches_bessel_oracle(nu):
+    r = np.linspace(1e-6, 12.0, 200)
+    got = np.asarray(matern(jnp.asarray(r), nu))
+    want = matern_scipy_oracle(r, nu)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(5, 30),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+    nu=st.sampled_from([0.5, 1.5, 2.5, 3.5]),
+)
+def test_covariance_is_psd(n, d, seed, nu):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, d)))
+    beta = rng.uniform(0.05, 5.0, size=d)
+    params = KernelParams.create(sigma2=rng.uniform(0.1, 3.0), beta=beta, nugget=1e-8)
+    k = np.asarray(cov_matrix(x, x, params, nu=nu, add_nugget=True))
+    np.testing.assert_allclose(k, k.T, atol=1e-12)
+    eig = np.linalg.eigvalsh(k)
+    assert eig.min() > -1e-8, eig.min()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 20), d=st.integers(1, 6), seed=st.integers(0, 10_000)
+)
+def test_scaled_sqdist_matches_naive(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x1 = rng.normal(size=(n, d))
+    x2 = rng.normal(size=(n + 1, d))
+    beta = rng.uniform(0.1, 4.0, size=d)
+    got = np.asarray(scaled_sqdist(jnp.asarray(x1), jnp.asarray(x2), jnp.asarray(beta)))
+    want = ((x1[:, None, :] - x2[None, :, :]) / beta) ** 2
+    np.testing.assert_allclose(got, want.sum(-1), rtol=1e-8, atol=1e-10)
+
+
+def test_matern_boundary_values():
+    for nu in (0.5, 1.5, 2.5, 3.5):
+        assert float(matern(jnp.asarray(0.0), nu)) == pytest.approx(1.0)
+        assert float(matern(jnp.asarray(50.0), nu)) < 1e-15

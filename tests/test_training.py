@@ -1,0 +1,73 @@
+"""Train-step invariants: grad-accum equivalence, compression, mixed precision."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.training.train_step import make_train_step, train_state_init
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced(n_layers=2, vocab=128)
+    params = init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)), jnp.int32)
+    lab = jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)), jnp.int32)
+    return cfg, params, tok, lab
+
+
+def _flat(t):
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in jax.tree.leaves(t)])
+
+
+def test_loss_decreases(setup):
+    cfg, params, tok, lab = setup
+    step = jax.jit(make_train_step(cfg, lr=1e-2))
+    state = train_state_init(params)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, tok, lab)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_grad_accum_matches_full_batch(setup):
+    """accum=4 microbatching must produce the same update as accum=1."""
+    cfg, params, tok, lab = setup
+    s1 = train_state_init(params)
+    s4 = train_state_init(params)
+    step1 = jax.jit(make_train_step(cfg, lr=1e-2, grad_accum=1))
+    step4 = jax.jit(make_train_step(cfg, lr=1e-2, grad_accum=4))
+    s1, m1 = step1(s1, tok, lab)
+    s4, m4 = step4(s4, tok, lab)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=2e-2)
+    p1, p4 = _flat(s1.params), _flat(s4.params)
+    # bf16 params: one quantum of rounding noise allowed
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p4), atol=2e-2)
+
+
+def test_compression_error_feedback(setup):
+    """int8-compressed training still reduces loss; errors stay bounded."""
+    cfg, params, tok, lab = setup
+    step = jax.jit(make_train_step(cfg, lr=1e-2, compress=True))
+    state = train_state_init(params)
+    err = None
+    losses = []
+    for _ in range(8):
+        state, m, err = step(state, tok, lab, err)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05, losses
+    enorm = float(jnp.sqrt(sum(jnp.sum(e * e) for e in jax.tree.leaves(err))))
+    assert np.isfinite(enorm)
+
+
+def test_opt_state_is_fp32(setup):
+    cfg, params, tok, lab = setup
+    state = train_state_init(params)
+    for leaf in jax.tree.leaves(state.opt.mu):
+        assert leaf.dtype == jnp.float32

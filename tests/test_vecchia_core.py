@@ -1,0 +1,130 @@
+"""Correctness of the Vecchia core: exactness identities, masking, KL."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (
+    KernelParams, SBVConfig, exact_loglik, kl_divergence, packed_loglik, preprocess,
+)
+from repro.core.blocks import BlockStructure, build_blocks, scale_inputs
+from repro.core.nns import brute_force_nns, filtered_nns
+from repro.core.packing import PackedBlocks, pack_blocks
+
+
+def make_data(n=80, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(n, d))
+    y = rng.normal(size=n)
+    return x, y
+
+
+PAR = KernelParams.create(sigma2=1.3, beta=[0.3, 0.5, 2.0], nugget=1e-2, d=3)
+
+
+def test_single_block_full_set_is_exact():
+    """bc=1 => the lone block term is the exact joint density."""
+    x, y = make_data(40)
+    cfg = SBVConfig(n_blocks=1, m=8)
+    packed, _ = preprocess(x, y, PAR.beta, cfg)
+    ll = packed_loglik(PAR, packed)
+    ll0 = exact_loglik(PAR, jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(float(ll), float(ll0), rtol=1e-10)
+
+
+def test_full_conditioning_is_exact():
+    """m >= n and bs=1 (classic Vecchia, all predecessors) => exact loglik."""
+    x, y = make_data(30)
+    cfg = SBVConfig(n_blocks=30, m=30, nns="brute")
+    packed, _ = preprocess(x, y, PAR.beta, cfg)
+    ll = packed_loglik(PAR, packed)
+    ll0 = exact_loglik(PAR, jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(float(ll), float(ll0), rtol=1e-9)
+
+
+def test_block_full_conditioning_is_exact():
+    """Blocked version with all preceding points as neighbors => exact."""
+    x, y = make_data(36)
+    cfg = SBVConfig(n_blocks=6, m=36, nns="brute")
+    packed, _ = preprocess(x, y, PAR.beta, cfg)
+    ll = packed_loglik(PAR, packed)
+    ll0 = exact_loglik(PAR, jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(float(ll), float(ll0), rtol=1e-9)
+
+
+def test_padding_invariance():
+    """Growing bs_max / m padding never changes the likelihood."""
+    x, y = make_data(60)
+    cfg = SBVConfig(n_blocks=10, m=12)
+    packed, blocks = preprocess(x, y, PAR.beta, cfg)
+    ll = packed_loglik(PAR, packed)
+
+    xs = scale_inputs(x, np.asarray(PAR.beta))
+    neigh = filtered_nns(xs, blocks, 12)
+    packed_big = pack_blocks(x, y, blocks, neigh, m=20, bs_max=packed.bs_max + 7)
+    # m=20 slots but only 12 neighbors filled -> extra padding only
+    packed_big = PackedBlocks(
+        blk_x=packed_big.blk_x, blk_y=packed_big.blk_y, blk_mask=packed_big.blk_mask,
+        nn_x=packed_big.nn_x, nn_y=packed_big.nn_y,
+        nn_mask=packed_big.nn_mask & (np.cumsum(packed_big.nn_mask, axis=1) <= 12),
+        owners=packed_big.owners,
+    )
+    ll_big = packed_loglik(PAR, packed_big)
+    np.testing.assert_allclose(float(ll), float(ll_big), rtol=1e-10)
+
+
+def test_dummy_block_padding_invariance():
+    x, y = make_data(50)
+    cfg = SBVConfig(n_blocks=8, m=10)
+    packed, _ = preprocess(x, y, PAR.beta, cfg)
+    ll = packed_loglik(PAR, packed)
+    ll_pad = packed_loglik(PAR, packed.pad_to_blocks(packed.n_blocks + 5))
+    np.testing.assert_allclose(float(ll), float(ll_pad), rtol=1e-10)
+
+
+def test_kl_nonnegative_and_decreasing_in_m():
+    x, _ = make_data(120, seed=3)
+    y = np.zeros(120)
+    kls = []
+    for m in (4, 16, 60):
+        cfg = SBVConfig(n_blocks=24, m=m, seed=1)
+        packed, _ = preprocess(x, y, PAR.beta, cfg)
+        kls.append(kl_divergence(PAR, x, packed))
+    assert all(k >= -1e-8 for k in kls), kls
+    assert kls[-1] <= kls[0] + 1e-8, kls
+
+
+def test_scaling_identity():
+    """SBV with kernel beta on X == isotropic BV on X/beta (exact identity)."""
+    x, y = make_data(50, seed=5)
+    beta = np.array([0.25, 0.8, 3.0])
+    cfg = SBVConfig(n_blocks=10, m=14, seed=2)
+    packed_raw, _ = preprocess(x, y, beta, cfg)
+    par_aniso = KernelParams.create(sigma2=1.0, beta=beta, nugget=1e-3)
+    ll_aniso = packed_loglik(par_aniso, packed_raw)
+
+    packed_scaled, _ = preprocess(x / beta, y, np.ones(3), SBVConfig(n_blocks=10, m=14, seed=2))
+    par_iso = KernelParams.create(sigma2=1.0, beta=np.ones(3), nugget=1e-3)
+    ll_iso = packed_loglik(par_iso, packed_scaled)
+    np.testing.assert_allclose(float(ll_aniso), float(ll_iso), rtol=1e-9)
+
+
+def test_filtered_nns_matches_brute_force():
+    x, _ = make_data(300, d=4, seed=7)
+    beta = np.array([0.2, 0.4, 1.0, 5.0])
+    xs = scale_inputs(x, beta)
+    blocks = build_blocks(xs, n_blocks=40, n_workers=4, beta=beta, seed=3)
+    for alpha in (2.0, 30.0, 100.0):
+        got = filtered_nns(xs, blocks, m=12, alpha=alpha)
+        want = brute_force_nns(xs, blocks, m=12)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_rac_blocks_partition_points():
+    x, _ = make_data(200, d=2, seed=9)
+    blocks = build_blocks(x, n_blocks=25, n_workers=4, beta=np.ones(2), seed=4)
+    all_idx = np.sort(np.concatenate(blocks.members))
+    np.testing.assert_array_equal(all_idx, np.arange(200))
+    assert blocks.n_blocks == len(blocks.members)
+    # ranks are a permutation
+    np.testing.assert_array_equal(np.sort(blocks.rank_of_block), np.arange(blocks.n_blocks))
