@@ -20,7 +20,15 @@ def parser(name: str) -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(name)
     ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas", "both"],
+                    help="kernel backend for benchmarks with a device hot path; "
+                         "'both' runs each and cross-checks agreement")
     return ap
+
+
+def backends(args) -> list[str]:
+    """Expand the --backend flag into the list of backends to run."""
+    return ["ref", "pallas"] if args.backend == "both" else [args.backend]
 
 
 def save(name: str, payload: dict):

@@ -15,7 +15,7 @@ from repro.core.kernels_math import KernelParams
 from repro.core.predict import mspe, predict_sbv
 from repro.data.gp_sim import paper_synthetic
 
-from .common import parser, save, table
+from .common import Timer, backends, parser, save, table
 
 
 def variant_cfg(variant: str, n: int, bs: int, m: int, seed: int):
@@ -24,7 +24,8 @@ def variant_cfg(variant: str, n: int, bs: int, m: int, seed: int):
     return SBVConfig(n_blocks=blocks, m=m, seed=seed)
 
 
-def run_variant(variant, x, y, params, bs, m, seed, bs_pred=5, m_pred=None):
+def run_variant(variant, x, y, params, bs, m, seed, bs_pred=5, m_pred=None,
+                backend_list=("ref",)):
     d = x.shape[1]
     iso = np.ones(d)
     beta_pre = np.asarray(params.beta) if variant in ("sv", "sbv") else iso
@@ -39,16 +40,30 @@ def run_variant(variant, x, y, params, bs, m, seed, bs_pred=5, m_pred=None):
     xt = rng.uniform(size=(n_test, d))
     xa = np.vstack([x, xt])
     ya = sample_gp_exact(seed + 8, xa, params) if xa.shape[0] <= 3200 else None
+    err, t_pred = None, {}
     if ya is not None:
         ytr, yte = ya[: x.shape[0]], ya[x.shape[0]:]
         # true kernel for ALL variants; only the NN-search scaling differs
-        pred = predict_sbv(params, x, ytr, xt, bs_pred=bs_pred,
-                           m_pred=m_pred or 2 * m,
-                           beta_struct=None if variant in ("sv", "sbv") else iso)
-        err = mspe(pred.mean, yte)
+        preds = {}
+        for backend in backend_list:
+            run = lambda: predict_sbv(
+                params, x, ytr, xt, bs_pred=bs_pred,
+                m_pred=m_pred or 2 * m, backend=backend,
+                beta_struct=None if variant in ("sv", "sbv") else iso)
+            run()  # warm-up: keep one-time jit compilation out of the timing
+            with Timer() as tm:
+                preds[backend] = run()
+            t_pred[backend] = tm.dt
+        if len(preds) == 2:  # both backends: cross-check the fused kernel
+            np.testing.assert_allclose(
+                preds["pallas"].mean, preds["ref"].mean, rtol=1e-5, atol=1e-8)
+            np.testing.assert_allclose(
+                preds["pallas"].var, preds["ref"].var, rtol=1e-5, atol=1e-8)
+        err = mspe(preds[backend_list[0]].mean, yte)
     else:
-        err = None
-    return kl, err
+        print(f"[fig4] n={x.shape[0]} too large for the exact-GP sample: "
+              f"MSPE + backend cross-check skipped for {variant!r}")
+    return kl, err, t_pred
 
 
 def main(argv=None):
@@ -58,12 +73,17 @@ def main(argv=None):
     bs, m = 10, 30
     x, y, params = paper_synthetic(args.seed, n)
 
+    backend_list = backends(args)
     rows = []
     for variant in ("cv", "bv", "sv", "sbv"):
-        kl, err = run_variant(variant, x, y, params, bs, m, args.seed)
-        rows.append({"variant": variant.upper(), "KL": kl, "MSPE": err,
-                     "KL/n": kl / n})
-    table(rows, ["variant", "KL", "KL/n", "MSPE"], "Fig. 4a/4b: approximation quality")
+        kl, err, t_pred = run_variant(variant, x, y, params, bs, m, args.seed,
+                                      backend_list=backend_list)
+        row = {"variant": variant.upper(), "KL": kl, "MSPE": err, "KL/n": kl / n}
+        for backend, dt in t_pred.items():
+            row[f"t_{backend}"] = dt
+        rows.append(row)
+    cols = ["variant", "KL", "KL/n", "MSPE"] + [f"t_{b}" for b in backend_list]
+    table(rows, cols, "Fig. 4a/4b: approximation quality")
 
     # (c) block-size sweep, SBV only
     sweep = []

@@ -1,14 +1,23 @@
 # The paper's primary contribution: the Scaled Block Vecchia GP.
 from .kernels_math import KernelParams, cov_matrix, matern, scaled_sqdist
 from .exact_gp import exact_loglik, exact_predict
+from .packing import PackedBlocks, PackedPrediction
 from .pipeline import SBVConfig, preprocess
+from .predict import (
+    Prediction, batched_block_predict, build_train_index, iter_query_chunks,
+    pack_queries, packed_predict, predict_sbv, scatter_packed,
+)
 from .vecchia import batched_block_loglik, packed_loglik
 from .kl import kl_divergence
 
 __all__ = [
     "KernelParams", "cov_matrix", "matern", "scaled_sqdist",
     "exact_loglik", "exact_predict",
+    "PackedBlocks", "PackedPrediction",
     "SBVConfig", "preprocess",
+    "Prediction", "batched_block_predict", "build_train_index",
+    "iter_query_chunks", "pack_queries", "packed_predict", "predict_sbv",
+    "scatter_packed",
     "batched_block_loglik", "packed_loglik",
     "kl_divergence",
 ]

@@ -11,6 +11,8 @@ axis IS the paper's data distribution.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .kernels_math import KernelParams
-from .packing import PackedBlocks
+from .packing import PackedBlocks, PackedPrediction
 from .vecchia import batched_block_loglik
 
 
@@ -71,6 +73,71 @@ def distributed_loglik(
         out_specs=P(),
     )
     return jax.jit(fn)(params, *arrs)
+
+
+def shard_prediction_by_owner(packed: PackedPrediction, n_workers: int) -> PackedPrediction:
+    """Prediction-side twin of ``shard_blocks_by_owner``: contiguous-by-owner
+    block order + fully-masked padding to a multiple of n_workers. Padded
+    blocks produce mu=0/var=prior and are dropped at scatter time, so the
+    reorder is free of correctness constraints — it only preserves the
+    paper's locality (a worker serves the query blocks whose neighbors it
+    already owns)."""
+    order = np.argsort(packed.owners, kind="stable")
+    g = lambda a: a[order]
+    packed = PackedPrediction(
+        q_x=g(packed.q_x), q_mask=g(packed.q_mask), q_idx=g(packed.q_idx),
+        nn_x=g(packed.nn_x), nn_y=g(packed.nn_y), nn_mask=g(packed.nn_mask),
+        owners=g(packed.owners),
+    )
+    bc = packed.n_blocks
+    target = ((bc + n_workers - 1) // n_workers) * n_workers
+    if target != bc:
+        packed = packed.pad_to_blocks(target)
+    return packed
+
+
+@functools.lru_cache(maxsize=None)
+def _predict_shard_fn(mesh: Mesh, axis: str, nu: float, backend: str):
+    """Cached jitted shard_map for prediction — chunked serving calls
+    ``distributed_predict`` once per chunk and must hit the same compiled
+    program (Mesh is hashable; the cache key is the full config)."""
+    from .predict import batched_block_predict
+
+    spec = P(axis)
+
+    def local(p, qx, qm, nx, ny, nm):
+        return batched_block_predict(p, qx, qm, nx, ny, nm, nu=nu, backend=backend)
+
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(),) + (spec,) * 5,
+        out_specs=(spec, spec),
+        # pallas_call has no replication rule; outputs are per-shard anyway
+        check_rep=False,
+    ))
+
+
+def distributed_predict(
+    params: KernelParams,
+    packed: PackedPrediction,
+    mesh: Mesh,
+    axis: str = "workers",
+    nu: float = 3.5,
+    backend: str = "ref",
+):
+    """Batched block prediction with blocks sharded over ``axis``.
+
+    Each shard computes the conditionals of its own blocks; unlike the
+    likelihood there is NO collective — per-block outputs stay sharded
+    (out_specs = blocks axis) and the host gathers them for the scatter.
+    Returns ``(mu, var)`` as (bc, bs_pred) arrays in the order of
+    ``packed`` (call ``shard_prediction_by_owner`` first so bc divides)."""
+    sharding = NamedSharding(mesh, P(axis))
+    arrs = [
+        jax.device_put(jnp.asarray(a), sharding) for a in packed.arrays()
+    ]
+    mu, var = _predict_shard_fn(mesh, axis, nu, backend)(params, *arrs)
+    return mu, var
 
 
 def distributed_neg_loglik_fn(packed, nu, mesh, axis="workers"):

@@ -65,6 +65,101 @@ class PackedBlocks:
         )
 
 
+@dataclass
+class PackedPrediction:
+    """Device-ready layout for block prediction (paper Eq. 3).
+
+    Prediction blocks are query (test) blocks; each conditions on its
+    m_pred nearest TRAINING points. Same identity-padding contract as
+    ``PackedBlocks``: padded neighbor rows factor through the conditional
+    as the identity, padded query columns produce mu=0 / var=prior and are
+    dropped at scatter time via ``q_mask``/``q_idx``.
+    """
+
+    q_x: np.ndarray      # (bc, bs_pred, d) raw query coords
+    q_mask: np.ndarray   # (bc, bs_pred) bool
+    q_idx: np.ndarray    # (bc, bs_pred) int32 global test index (0 on pads)
+    nn_x: np.ndarray     # (bc, m_pred, d) raw training-neighbor coords
+    nn_y: np.ndarray     # (bc, m_pred)
+    nn_mask: np.ndarray  # (bc, m_pred) bool
+    owners: np.ndarray   # (bc,) worker id per block
+
+    @property
+    def n_blocks(self) -> int:
+        return self.q_x.shape[0]
+
+    @property
+    def bs_pred(self) -> int:
+        return self.q_x.shape[1]
+
+    @property
+    def m_pred(self) -> int:
+        return self.nn_x.shape[1]
+
+    @property
+    def n_queries(self) -> int:
+        return int(self.q_mask.sum())
+
+    def arrays(self) -> tuple:
+        """The five device operands of the batched predict kernels."""
+        return self.q_x, self.q_mask, self.nn_x, self.nn_y, self.nn_mask
+
+    def pad_to_blocks(self, bc_target: int) -> "PackedPrediction":
+        """Append fully-masked dummy blocks (even sharding / jit-shape reuse)."""
+        extra = bc_target - self.n_blocks
+        if extra <= 0:
+            return self
+        z = lambda a: np.concatenate(
+            [a, np.zeros((extra,) + a.shape[1:], dtype=a.dtype)], axis=0
+        )
+        return PackedPrediction(
+            q_x=z(self.q_x), q_mask=z(self.q_mask), q_idx=z(self.q_idx),
+            nn_x=z(self.nn_x), nn_y=z(self.nn_y), nn_mask=z(self.nn_mask),
+            owners=z(self.owners),
+        )
+
+
+def pack_prediction(
+    x_test: np.ndarray,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    test_blocks: BlockStructure,
+    neighbors: list[np.ndarray],
+    m_pred: int,
+    bs_max: int | None = None,
+    dtype=np.float64,
+) -> PackedPrediction:
+    """Pack prediction blocks + per-block training neighbors into padded
+    arrays. ``neighbors[b]`` indexes ``x_train`` (full training set, no
+    ordering constraint — Eq. 3 conditions on the training vector y)."""
+    bc = test_blocks.n_blocks
+    d = x_test.shape[1]
+    if bs_max is None:
+        bs_max = max(mb.size for mb in test_blocks.members)
+
+    q_x = np.zeros((bc, bs_max, d), dtype=dtype)
+    q_mask = np.zeros((bc, bs_max), dtype=bool)
+    q_idx = np.zeros((bc, bs_max), dtype=np.int32)
+    nn_x = np.zeros((bc, m_pred, d), dtype=dtype)
+    nn_y = np.zeros((bc, m_pred), dtype=dtype)
+    nn_mask = np.zeros((bc, m_pred), dtype=bool)
+    owners = np.zeros(bc, dtype=np.int32)
+
+    for b in range(bc):
+        mb = test_blocks.members[b]
+        if mb.size > bs_max:
+            raise ValueError(f"prediction block {b} size {mb.size} > bs_max {bs_max}")
+        q_x[b, : mb.size] = x_test[mb]
+        q_mask[b, : mb.size] = True
+        q_idx[b, : mb.size] = mb
+        nb = neighbors[b][:m_pred]
+        nn_x[b, : nb.size] = x_train[nb]
+        nn_y[b, : nb.size] = y_train[nb]
+        nn_mask[b, : nb.size] = True
+        owners[b] = test_blocks.owners[b]
+    return PackedPrediction(q_x, q_mask, q_idx, nn_x, nn_y, nn_mask, owners)
+
+
 def pack_blocks(
     x_raw: np.ndarray,
     y: np.ndarray,

@@ -1,22 +1,38 @@
 """Block prediction with conditional simulation (paper Eq. 3 + §5.1.5).
 
-Test points are clustered into prediction blocks (bs_pred); each block is
-conditioned on its m_pred nearest TRAINING points (no ordering constraint
-— Eq. 3 conditions on the full training vector y). Per paper §5.1.5 the
-per-point predictive distribution N(mu_j, sigma_j^2) is then sampled (1000
-draws) to form sample means and 95% confidence intervals.
+Serving-side mirror of the likelihood stack:
+
+    pack   -- test points are clustered into prediction blocks (bs_pred);
+              each block is conditioned on its m_pred nearest TRAINING
+              points (no ordering constraint — Eq. 3 conditions on the
+              full training vector y). Blocks + neighbors are packed into
+              fixed-size padded arrays (``PackedPrediction``).
+    predict - ONE vmapped/jitted call over the packed arrays computes every
+              block conditional, with the per-point simulation draws
+              (paper §5.1.5: 1000 samples of N(mu_j, sigma_j^2)) taken
+              inside the same jitted program via ``jax.random``.
+              ``backend='pallas'`` dispatches the conditional to the fused
+              kernel in ``repro/kernels/sbv_predict.py``.
+    scatter - padded per-block results land back in test-point order via
+              the packed scatter indices (vectorized, no Python loop).
+
+``chunk_size`` bounds device memory for arbitrary n_test: the training
+index is built once, then fixed-shape chunks stream through the jitted
+predict program (shapes are rounded up so the jit cache is reused).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .blocks import build_blocks, scale_inputs
+from .blocks import BlockStructure, build_blocks, scale_inputs
 from .kernels_math import KernelParams
 from .nns import filtered_knn_points
+from .packing import PackedPrediction, pack_prediction
 from .vecchia import _masked_cov
 
 
@@ -27,6 +43,116 @@ class Prediction:
     sim_mean: np.ndarray   # (n*,) conditional-simulation sample mean
     ci_low: np.ndarray     # (n*,) 95% CI bounds from simulation
     ci_high: np.ndarray
+
+
+@dataclass
+class TrainIndex:
+    """Host-side training-set structure reused across prediction chunks."""
+
+    x: np.ndarray          # (n, d) raw training inputs
+    y: np.ndarray          # (n,) training observations
+    xs: np.ndarray         # (n, d) scaled inputs (structure space)
+    beta: np.ndarray       # (d,) structure scaling
+    blocks: BlockStructure # coarse blocks for the filtered kNN
+
+
+def build_train_index(
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    beta: np.ndarray,
+    m_pred: int,
+    n_workers: int = 1,
+    seed: int = 0,
+) -> TrainIndex:
+    """Scale + coarse-block the training set once; reused per chunk."""
+    x_train = np.asarray(x_train, dtype=np.float64)
+    y_train = np.asarray(y_train, dtype=np.float64)
+    beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (x_train.shape[1],))
+    xs = scale_inputs(x_train, beta)
+    bc_train = max(1, x_train.shape[0] // max(4 * m_pred, 64))
+    blocks = build_blocks(xs, bc_train, n_workers, beta, seed=seed)
+    return TrainIndex(x=x_train, y=y_train, xs=xs, beta=beta, blocks=blocks)
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def scatter_packed(packed: PackedPrediction, *pairs) -> None:
+    """Vectorized scatter: for each ``(padded_values, out)`` pair write
+    ``out[q_idx[mask]] = padded_values[mask]`` (drops padding)."""
+    msk = packed.q_mask
+    idx = packed.q_idx[msk]
+    for values, out in pairs:
+        out[idx] = np.asarray(values)[msk]
+
+
+def pack_queries(
+    index: TrainIndex,
+    x_test: np.ndarray,
+    bs_pred: int,
+    m_pred: int,
+    alpha: float = 100.0,
+    seed: int = 0,
+    n_workers: int = 1,
+    offset: int = 0,
+    pad_shapes: bool = False,
+    dtype=np.float64,
+) -> PackedPrediction:
+    """Cluster test points into prediction blocks, find each block's m_pred
+    nearest training points, pack. ``offset`` shifts the scatter indices
+    (chunked serving). ``pad_shapes`` rounds bs/bc up to multiples of 8 so
+    successive chunks hit the same jit cache entry. ``dtype`` controls the
+    packed array precision (use float32 for the compiled TPU Pallas path;
+    float64 is fine in interpret mode / on CPU)."""
+    x_test = np.asarray(x_test, dtype=np.float64)
+    n_test = x_test.shape[0]
+    xs_test = scale_inputs(x_test, index.beta)
+    bc_pred = max(1, n_test // bs_pred)
+    test_blocks = build_blocks(xs_test, bc_pred, n_workers, index.beta, seed=seed + 1)
+    neigh = filtered_knn_points(index.xs, index.blocks, test_blocks.centers, m_pred, alpha)
+
+    bs_max = max(mb.size for mb in test_blocks.members)
+    if pad_shapes:
+        bs_max = _round_up(bs_max, 8)
+    packed = pack_prediction(
+        x_test, index.x, index.y, test_blocks, neigh, m_pred, bs_max=bs_max,
+        dtype=dtype,
+    )
+    if offset:
+        packed.q_idx[packed.q_mask] += offset
+    if pad_shapes:
+        packed = packed.pad_to_blocks(_round_up(packed.n_blocks, 8))
+    return packed
+
+
+def iter_query_chunks(
+    index: TrainIndex,
+    x_test: np.ndarray,
+    bs_pred: int,
+    m_pred: int,
+    alpha: float = 100.0,
+    seed: int = 0,
+    n_workers: int = 1,
+    chunk_size: int | None = None,
+    dtype=np.float64,
+):
+    """Yield ``(chunk_id, PackedPrediction)`` over the test set.
+
+    The single chunking protocol shared by ``predict_sbv`` and the serving
+    driver: step clamped to >= bs_pred, per-chunk seed variation, scatter
+    offsets, and jit-stable padded shapes in chunked mode all live HERE so
+    the two paths cannot drift."""
+    x_test = np.asarray(x_test, dtype=np.float64)
+    n_test = x_test.shape[0]
+    step = n_test if chunk_size is None else max(int(chunk_size), bs_pred)
+    for ci, start in enumerate(range(0, n_test, step)):
+        stop = min(n_test, start + step)
+        yield ci, pack_queries(
+            index, x_test[start:stop], bs_pred, m_pred, alpha=alpha,
+            seed=seed + ci, n_workers=n_workers, offset=start,
+            pad_shapes=chunk_size is not None, dtype=dtype,
+        )
 
 
 def _predict_one(params, nu, qx, qmask, nx, ny, nmask):
@@ -42,6 +168,57 @@ def _predict_one(params, nu, qx, qmask, nx, ny, nmask):
     return mu, jnp.maximum(var, 1e-12)
 
 
+@partial(jax.jit, static_argnames=("nu", "backend"))
+def batched_block_predict(
+    params: KernelParams,
+    q_x, q_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+    backend: str = "ref",
+):
+    """Conditional mean/variance for every prediction block in one jitted
+    call on packed arrays: (bc, bs_pred) each. Padded query slots carry
+    mu=0 / var=prior; drop them with the mask."""
+    if backend == "ref":
+        return jax.vmap(
+            lambda a, b, c, d, e: _predict_one(params, nu, a, b, c, d, e)
+        )(q_x, q_mask, nn_x, nn_y, nn_mask)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.sbv_predict(params, q_x, q_mask, nn_x, nn_y, nn_mask, nu=nu)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def packed_predict(
+    params: KernelParams,
+    packed: PackedPrediction,
+    nu: float = 3.5,
+    backend: str = "ref",
+):
+    """Mean/variance of a PackedPrediction (padded (bc, bs_pred) arrays)."""
+    q_x, q_mask, nn_x, nn_y, nn_mask = (jnp.asarray(a) for a in packed.arrays())
+    return batched_block_predict(
+        params, q_x, q_mask, nn_x, nn_y, nn_mask, nu=nu, backend=backend
+    )
+
+
+@partial(jax.jit, static_argnames=("nu", "backend", "n_sims"))
+def _predict_and_simulate(
+    params, q_x, q_mask, nn_x, nn_y, nn_mask, key,
+    nu: float, backend: str, n_sims: int,
+):
+    """End-to-end jitted per-chunk math: block conditionals + vectorized
+    conditional simulation (paper §5.1.5) in one device program."""
+    mu, var = batched_block_predict(
+        params, q_x, q_mask, nn_x, nn_y, nn_mask, nu=nu, backend=backend
+    )
+    eps = jax.random.normal(key, (n_sims,) + mu.shape, dtype=mu.dtype)
+    draws = mu[None] + jnp.sqrt(var)[None] * eps
+    sim_mean = jnp.mean(draws, axis=0)
+    sim_std = jnp.std(draws, axis=0, ddof=1)
+    return mu, var, sim_mean, sim_std
+
+
 def predict_sbv(
     params: KernelParams,
     x_train: np.ndarray,
@@ -55,58 +232,40 @@ def predict_sbv(
     seed: int = 0,
     n_workers: int = 1,
     beta_struct: np.ndarray | None = None,
+    backend: str = "ref",
+    chunk_size: int | None = None,
+    dtype=np.float64,
 ) -> Prediction:
-    """``beta_struct`` overrides the scaling used for clustering/NNS only
+    """Packed block prediction over the full test set.
+
+    ``beta_struct`` overrides the scaling used for clustering/NNS only
     (paper Fig. 4 isolates structure quality: BV = isotropic structure +
-    true kernel; SBV = scaled structure + true kernel)."""
+    true kernel; SBV = scaled structure + true kernel). ``chunk_size``
+    streams the test set through fixed-shape device programs so memory
+    stays bounded for arbitrary n_test."""
     beta = np.asarray(params.beta if beta_struct is None else beta_struct)
-    xs_train = scale_inputs(x_train, beta)
-    xs_test = scale_inputs(x_test, beta)
-    n_test, d = x_test.shape
-
-    # Training blocks give the coarse structure for filtered kNN.
-    bc_train = max(1, x_train.shape[0] // max(4 * m_pred, 64))
-    train_blocks = build_blocks(xs_train, bc_train, n_workers, beta, seed=seed)
-
-    # Prediction blocks over the test points.
-    bc_pred = max(1, n_test // bs_pred)
-    test_blocks = build_blocks(xs_test, bc_pred, n_workers, beta, seed=seed + 1)
-    neigh = filtered_knn_points(xs_train, train_blocks, test_blocks.centers, m_pred, alpha)
-
-    bs_max = max(mb.size for mb in test_blocks.members)
-    bcp = test_blocks.n_blocks
-    qx = np.zeros((bcp, bs_max, d))
-    qmask = np.zeros((bcp, bs_max), dtype=bool)
-    nx = np.zeros((bcp, m_pred, d))
-    ny = np.zeros((bcp, m_pred))
-    nmask = np.zeros((bcp, m_pred), dtype=bool)
-    for b, mb in enumerate(test_blocks.members):
-        qx[b, : mb.size] = x_test[mb]
-        qmask[b, : mb.size] = True
-        nb = neigh[b][:m_pred]
-        nx[b, : nb.size] = x_train[nb]
-        ny[b, : nb.size] = y_train[nb]
-        nmask[b, : nb.size] = True
-
-    mu_b, var_b = jax.jit(
-        jax.vmap(lambda a, b_, c, d_, e: _predict_one(params, nu, a, b_, c, d_, e))
-    )(jnp.asarray(qx), jnp.asarray(qmask), jnp.asarray(nx), jnp.asarray(ny), jnp.asarray(nmask))
+    x_test = np.asarray(x_test, dtype=np.float64)
+    n_test = x_test.shape[0]
+    index = build_train_index(x_train, y_train, beta, m_pred, n_workers, seed)
 
     mean = np.zeros(n_test)
     var = np.zeros(n_test)
-    mu_b = np.asarray(mu_b)
-    var_b = np.asarray(var_b)
-    for b, mb in enumerate(test_blocks.members):
-        mean[mb] = mu_b[b, : mb.size]
-        var[mb] = var_b[b, : mb.size]
-
-    # Conditional simulation (paper: 1000 draws from N(mu_j, sigma_j)).
+    sim_mean = np.zeros(n_test)
+    sim_std = np.zeros(n_test)
     key = jax.random.PRNGKey(seed)
-    draws = np.asarray(
-        jax.random.normal(key, (n_sims, n_test)) * np.sqrt(var)[None, :] + mean[None, :]
-    )
-    sim_mean = draws.mean(axis=0)
-    sim_std = draws.std(axis=0, ddof=1)
+
+    for ci, packed in iter_query_chunks(
+        index, x_test, bs_pred, m_pred, alpha=alpha, seed=seed,
+        n_workers=n_workers, chunk_size=chunk_size, dtype=dtype,
+    ):
+        mu_b, var_b, sm_b, ss_b = _predict_and_simulate(
+            params, *(jnp.asarray(a) for a in packed.arrays()),
+            jax.random.fold_in(key, ci),
+            nu=nu, backend=backend, n_sims=n_sims,
+        )
+        scatter_packed(packed, (mu_b, mean), (var_b, var),
+                       (sm_b, sim_mean), (ss_b, sim_std))
+
     z975 = 1.959963984540054
     return Prediction(
         mean=mean, var=var, sim_mean=sim_mean,

@@ -28,6 +28,7 @@ from repro.analysis.hlo_analysis import analyze_compiled, model_flops, roofline
 from repro.configs import ARCHS, SHAPES, applicable, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SBV_GP_SHAPES, build_cell
+from repro.sharding.compat import set_mesh
 
 MESHES = {"pod": False, "multipod": True}
 
@@ -41,7 +42,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, verbose: bool = True) -
         step, in_shardings=in_sh, out_shardings=out_sh,
         donate_argnums=donate or None,
     )
-    with jax.set_mesh(mesh):  # activates activation-sharding constraints
+    with set_mesh(mesh):  # activates activation-sharding constraints
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()

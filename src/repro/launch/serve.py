@@ -1,7 +1,17 @@
-"""Batched serving driver: prefill + decode loop with a sharded KV cache.
+"""Batched serving drivers.
+
+LM mode (default): prefill + decode loop with a sharded KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --batch 4 --prompt-len 64 --max-new 32 --mesh 1x1
+
+GP mode: chunked SBV prediction (paper Eq. 3) — the training index is
+built once, then arbitrary n_test streams through fixed-shape jitted
+chunks so device memory stays bounded no matter how many queries arrive.
+
+    PYTHONPATH=src python -m repro.launch.serve gp --n-train 20000 \
+        --n-test 100000 --chunk 4096 --bs-pred 25 --m-pred 120 \
+        --backend pallas --workers 4
 """
 from __future__ import annotations
 
@@ -15,11 +25,104 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models.model import init_params, prefill_step, serve_step
+from repro.sharding.compat import set_mesh
 from repro.sharding.rules import batch_spec, cache_specs, param_specs, tp_size
 from repro.launch.train import make_mesh
 
 
+def serve_gp(argv=None):
+    """Chunked SBV prediction server (bounded memory for arbitrary n_test).
+
+    ``--workers k`` shards each chunk's prediction blocks over a k-device
+    mesh (``distributed_predict``); the scatter stays host-side."""
+    ap = argparse.ArgumentParser("serve gp")
+    ap.add_argument("--dataset", default="synthetic",
+                    choices=["synthetic", "satdrag", "metarvm"])
+    ap.add_argument("--n-train", type=int, default=20_000)
+    ap.add_argument("--n-test", type=int, default=100_000)
+    ap.add_argument("--chunk", type=int, default=4096)
+    ap.add_argument("--bs-pred", type=int, default=25)
+    ap.add_argument("--m-pred", type=int, default=120)
+    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
+    ap.add_argument("--dtype", default="f64", choices=["f32", "f64"],
+                    help="packed-array precision; use f32 for the compiled "
+                         "(non-interpret) TPU Pallas kernel")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    dtype = np.float32 if args.dtype == "f32" else np.float64
+
+    from repro.core.predict import (
+        build_train_index, iter_query_chunks, packed_predict, scatter_packed,
+    )
+    from repro.data.gp_sim import paper_synthetic
+    from repro.launch.fit_gp import load_dataset
+
+    if args.dataset == "synthetic":
+        x, y, params = paper_synthetic(args.seed, args.n_train)
+    else:
+        x, y = load_dataset(args.dataset, args.n_train, args.seed)
+        from repro.core.fit import fit_sbv
+        from repro.core.pipeline import SBVConfig
+
+        cfg = SBVConfig(n_blocks=max(1, args.n_train // 128), m=60, seed=args.seed)
+        params = fit_sbv(x, y, cfg, inner_steps=30, outer_rounds=1).params
+
+    rng = np.random.default_rng(args.seed + 1)
+    x_test = rng.uniform(size=(args.n_test, x.shape[1]))
+
+    t0 = time.time()
+    index = build_train_index(x, y, np.asarray(params.beta), args.m_pred,
+                              n_workers=args.workers, seed=args.seed)
+    print(f"[serve-gp] train index over {len(y)} pts: {time.time()-t0:.2f}s")
+
+    mesh = None
+    if args.workers > 1:
+        from repro.launch.mesh import make_worker_mesh
+
+        mesh = make_worker_mesh(args.workers)
+
+    mean = np.zeros(args.n_test)
+    var = np.zeros(args.n_test)
+    t0 = time.time()
+    n_chunks = 0
+    for ci, packed in iter_query_chunks(
+        index, x_test, args.bs_pred, args.m_pred, seed=args.seed,
+        n_workers=args.workers, chunk_size=args.chunk, dtype=dtype,
+    ):
+        tc = time.time()
+        if mesh is not None:
+            from repro.core.distributed import (
+                distributed_predict, shard_prediction_by_owner,
+            )
+
+            packed = shard_prediction_by_owner(packed, args.workers)
+            mu_b, var_b = distributed_predict(params, packed, mesh,
+                                              backend=args.backend)
+        else:
+            mu_b, var_b = packed_predict(params, packed, backend=args.backend)
+        scatter_packed(packed, (mu_b, mean), (var_b, var))
+        n_chunks += 1
+        if ci < 3 or ci % 16 == 0:
+            print(f"[serve-gp] chunk {ci}: {packed.n_queries} pts "
+                  f"(bc={packed.n_blocks}, bs={packed.bs_pred}) "
+                  f"{time.time()-tc:.3f}s")
+    dt = time.time() - t0
+    print(f"[serve-gp] {args.n_test} predictions in {dt:.2f}s over {n_chunks} "
+          f"chunks: {args.n_test/dt:.0f} pts/s (backend={args.backend}, "
+          f"workers={args.workers})")
+    assert np.all(np.isfinite(mean)) and np.all(var > 0)
+    # Serving returns the analytic conditionals only; conditional-simulation
+    # UQ (paper §5.1.5) is the library path: predict_sbv(..., n_sims=...).
+    return mean, var
+
+
 def main(argv=None):
+    import sys
+
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if argv and argv[0] == "gp":
+        return serve_gp(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true")
@@ -47,7 +150,7 @@ def main(argv=None):
         rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)), jnp.int32
     )
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t0 = time.time()
         logits, cache = jax.jit(
             lambda p, t: prefill_step(p, t, cfg, cache_len, tp=tp)

@@ -27,6 +27,7 @@ from repro.data.tokens import TokenStream
 from repro.models.model import init_params
 from repro.sharding.rules import batch_spec, param_specs, tp_size
 from repro.training.train_step import TrainState, make_train_step, train_state_init
+from repro.sharding.compat import set_mesh
 
 
 def make_mesh(spec: str):
@@ -112,7 +113,7 @@ def main(argv=None):
             lambda: (snap["step"], snap["state"], {"stream": stream.state_dict()})
         )
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t_last = time.time()
         for i in range(start_step, start_step + args.steps):
             tok, lab = stream.next()

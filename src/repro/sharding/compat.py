@@ -1,0 +1,53 @@
+"""JAX version-compat shims for the mesh/sharding API surface.
+
+The repo targets the modern mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``AxisType``) but must also run on
+older installs (e.g. 0.4.x) where none of those exist. Policy (see
+docs/predict.md "JAX compat"): import the new names defensively and fall
+back to the legacy physical-mesh context manager, which provides the same
+observable behavior for everything this codebase needs:
+
+* ``get_abstract_mesh()``      -> the ambient mesh (``.empty`` when none);
+* ``set_mesh(mesh)``           -> context manager activating ``mesh``;
+* ``make_mesh(shape, axes)``   -> mesh constructor (Auto axes when supported).
+
+Model/test code must import these from here, never from ``jax`` directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # modern JAX
+    from jax.sharding import get_abstract_mesh  # type: ignore[attr-defined]
+except ImportError:  # legacy: read the physical-mesh context (``with mesh:``)
+    def get_abstract_mesh():
+        from jax._src.mesh import thread_resources
+
+        return thread_resources.env.physical_mesh
+
+
+# Pick the set_mesh variant matching get_abstract_mesh: every JAX that has
+# jax.sharding.get_abstract_mesh also ships one of the modern setters, so
+# trying them in order keeps the pair consistent (a legacy `with mesh:`
+# context would NOT be visible to the modern abstract-mesh getter).
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "set_mesh"):
+    set_mesh = jax.sharding.set_mesh  # type: ignore[attr-defined]
+elif hasattr(jax.sharding, "use_mesh"):
+    set_mesh = jax.sharding.use_mesh  # type: ignore[attr-defined]
+else:
+    def set_mesh(mesh):
+        """Legacy fallback: a ``Mesh`` is itself a context manager that
+        installs the ambient mesh read back by ``get_abstract_mesh``."""
+        return mesh
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types when the install has them."""
+    try:
+        from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)

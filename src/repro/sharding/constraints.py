@@ -14,7 +14,9 @@ from __future__ import annotations
 import os
 
 import jax
-from jax.sharding import PartitionSpec as P, get_abstract_mesh
+from jax.sharding import PartitionSpec as P
+
+from .compat import get_abstract_mesh
 
 # A/B kill switch for §Perf: REPRO_NO_CONSTRAINTS=1 disables every
 # activation constraint so the un-annotated model can be re-measured

@@ -1,0 +1,31 @@
+"""Import hypothesis or stub it: ``@given`` tests skip when it's absent.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt). Test
+modules that mix property tests with plain pytest tests import
+``given/settings/st`` from here so the plain tests keep running on
+environments without hypothesis instead of erroring at collection.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: decorated tests skip, module still collects
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.<anything>(...) returns an inert placeholder at collection."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

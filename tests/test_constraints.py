@@ -2,6 +2,9 @@
 cache expansion factor."""
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS, get_config

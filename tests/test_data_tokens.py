@@ -2,7 +2,9 @@
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hypothesis_compat import given, settings, st  # skips @given tests if absent
 
 from repro.data.tokens import TokenStream
 

@@ -51,3 +51,59 @@ def test_distributed_loglik_matches_serial():
     )
     assert r.returncode == 0, r.stdout + "\n" + r.stderr
     assert "DIST_OK" in r.stdout
+
+
+PREDICT_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core import KernelParams
+    from repro.core.distributed import distributed_predict, shard_prediction_by_owner
+    from repro.core.predict import (
+        build_train_index, pack_queries, packed_predict, scatter_packed,
+    )
+    from repro.data.gp_sim import paper_synthetic
+
+    assert jax.device_count() == 8, jax.device_count()
+
+    x, y, params = paper_synthetic(seed=0, n=400, d=4)
+    rng = np.random.default_rng(9)
+    xt = rng.uniform(size=(120, 4))
+
+    def scattered(packed, mu, var):
+        # gather per-point results regardless of block order/padding
+        m = np.zeros(120); v = np.zeros(120)
+        scatter_packed(packed, (mu, m), (var, v))
+        return m, v
+
+    # serial reference (single vmapped call, no sharding)
+    index = build_train_index(x, y, np.asarray(params.beta), 40,
+                              n_workers=4, seed=0)
+    packed = pack_queries(index, xt, bs_pred=8, m_pred=40, seed=0, n_workers=4)
+    m_ser, v_ser = scattered(packed, *packed_predict(params, packed))
+
+    # 1-shard vs 4-shard distributed prediction: same mean/var bitwise-close
+    for nw in (1, 4):
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:nw]), ("workers",))
+        sharded = shard_prediction_by_owner(packed, nw)
+        mu, var = distributed_predict(params, sharded, mesh)
+        m_d, v_d = scattered(sharded, mu, var)
+        np.testing.assert_allclose(m_d, m_ser, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(v_d, v_ser, rtol=1e-12, atol=1e-12)
+    print("DIST_PREDICT_OK")
+    """
+)
+
+
+def test_distributed_predict_matches_serial():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", PREDICT_SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))), env=env,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "DIST_PREDICT_OK" in r.stdout

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # skips @given tests if absent
 
 from repro.core import KernelParams, cov_matrix, matern
 from repro.core.kernels_math import matern_scipy_oracle, scaled_sqdist
