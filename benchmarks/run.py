@@ -22,6 +22,7 @@ MODULES = [
     "fig10_energy",
     "table2_complexity",
     "ablation_structure",
+    "serving_throughput",
 ]
 
 

@@ -140,6 +140,31 @@ def distributed_predict(
     return mu, var
 
 
+def sharded_packed_predict(
+    params: KernelParams,
+    packed: PackedPrediction,
+    mesh: Mesh,
+    axis: str = "workers",
+    nu: float = 3.5,
+    backend: str = "ref",
+):
+    """One sharded micro-batch: owner-contiguous reorder + padded sharding +
+    distributed block conditionals.
+
+    The serving pipeline's per-chunk compute when a mesh is attached.
+    Returns ``(packed, mu, var)`` — the REORDERED packed (its ``q_idx``
+    matches the output block order) so the caller scatters with the right
+    indices. The shard_map program is cached per (mesh, axis, nu, backend),
+    so successive micro-batches of the same padded shape hit one compiled
+    executable."""
+    n_shards = int(np.prod([mesh.shape[a] for a in
+                            (axis if isinstance(axis, tuple) else (axis,))]))
+    packed = shard_prediction_by_owner(packed, n_shards)
+    mu, var = distributed_predict(params, packed, mesh, axis=axis, nu=nu,
+                                  backend=backend)
+    return packed, mu, var
+
+
 def distributed_neg_loglik_fn(packed, nu, mesh, axis="workers"):
     """Loss closure for fit_sbv(distributed=(mesh, axis))."""
     n_workers = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))

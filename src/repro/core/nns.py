@@ -83,11 +83,14 @@ def filtered_nns(
     m: int,
     alpha: float = 100.0,
     center_chunk: int = 2048,
+    flat: _FlatBlocks | None = None,
 ) -> list[np.ndarray]:
     """Exact preceding-block m-NNS per block via filtered candidate sets.
 
     Returns ``neigh[b]`` = global point indices (up to m; fewer for
     early-ordered blocks) sorted by distance to the center of block b.
+    ``flat`` lets callers reuse a prebuilt ``_FlatBlocks`` of
+    ``(x_scaled, blocks)`` — building one does a full n x d gather.
     """
     bc = blocks.n_blocks
     d = x_scaled.shape[1]
@@ -96,7 +99,8 @@ def filtered_nns(
 
     centers = blocks.centers
     ranks = blocks.rank_of_block
-    flat = _FlatBlocks(x_scaled, blocks)
+    if flat is None:
+        flat = _FlatBlocks(x_scaled, blocks)
     c2 = np.sum(centers * centers, axis=1)
     neigh: list[np.ndarray] = [np.empty(0, np.int64)] * bc
 
@@ -152,14 +156,20 @@ def filtered_knn_points(
     m: int,
     alpha: float = 100.0,
     center_chunk: int = 2048,
+    flat: _FlatBlocks | None = None,
 ) -> list[np.ndarray]:
     """Unconstrained k-NN of arbitrary query points against ALL training
     points, via the same coarse(block)/fine(point) filter. Used by the
-    prediction stage (Eq. 3: NN(B_j^*) drawn from the full training set)."""
+    prediction stage (Eq. 3: NN(B_j^*) drawn from the full training set).
+
+    ``flat`` lets chunked/persistent serving reuse one ``_FlatBlocks`` of
+    the training set instead of re-flattening (a full n x d gather) per
+    query chunk."""
     n, d = x_scaled.shape
     nq = queries.shape[0]
     lam = nns_radius(n, m, d, _scaled_domain_volume(x_scaled), alpha)
-    flat = _FlatBlocks(x_scaled, blocks)
+    if flat is None:
+        flat = _FlatBlocks(x_scaled, blocks)
     centers = blocks.centers
     c2 = np.sum(centers * centers, axis=1)
     bc = blocks.n_blocks

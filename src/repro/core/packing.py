@@ -16,6 +16,25 @@ import numpy as np
 
 from .blocks import BlockStructure
 
+# TPU f32 native tile: (sublane, lane) = (8, 128). In the fused predict
+# kernel the per-block working set is (m, bs)-shaped (K_cross, the joint
+# solve RHS) and (m, m) (K_con), with bs the sublane-side and m the
+# lane/contraction side of the MXU ops — so bs rounds to 8 and m to 128
+# for the compiled (non-interpret) path.
+TILE_SUBLANE = 8
+TILE_LANE = 128
+
+
+def round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def tile_predict_shapes(
+    bs: int, m: int, bs_mult: int = TILE_SUBLANE, m_mult: int = TILE_LANE
+) -> tuple[int, int]:
+    """Lane-aligned (bs, m) for the compiled TPU predict kernel."""
+    return round_up(bs, bs_mult), round_up(m, m_mult)
+
 
 @dataclass
 class PackedBlocks:
@@ -116,6 +135,29 @@ class PackedPrediction:
             q_x=z(self.q_x), q_mask=z(self.q_mask), q_idx=z(self.q_idx),
             nn_x=z(self.nn_x), nn_y=z(self.nn_y), nn_mask=z(self.nn_mask),
             owners=z(self.owners),
+        )
+
+    def pad_to_tiles(
+        self, bs_mult: int = TILE_SUBLANE, m_mult: int = TILE_LANE
+    ) -> "PackedPrediction":
+        """Widen bs_pred/m_pred to lane-aligned tiles with masked padding.
+
+        Padded query slots and neighbor rows carry zero mask, so the
+        identity-padding contract makes them inert; only the shapes the
+        compiled TPU kernel sees change."""
+        bs_t, m_t = tile_predict_shapes(self.bs_pred, self.m_pred, bs_mult, m_mult)
+        if bs_t == self.bs_pred and m_t == self.m_pred:
+            return self
+        w = lambda a, width: np.concatenate(
+            [a, np.zeros(a.shape[:1] + (width - a.shape[1],) + a.shape[2:],
+                         dtype=a.dtype)], axis=1
+        ) if width > a.shape[1] else a
+        return PackedPrediction(
+            q_x=w(self.q_x, bs_t), q_mask=w(self.q_mask, bs_t),
+            q_idx=w(self.q_idx, bs_t),
+            nn_x=w(self.nn_x, m_t), nn_y=w(self.nn_y, m_t),
+            nn_mask=w(self.nn_mask, m_t),
+            owners=self.owners,
         )
 
 

@@ -31,8 +31,8 @@ import numpy as np
 
 from .blocks import BlockStructure, build_blocks, scale_inputs
 from .kernels_math import KernelParams
-from .nns import filtered_knn_points
-from .packing import PackedPrediction, pack_prediction
+from .nns import _FlatBlocks, filtered_knn_points
+from .packing import PackedPrediction, pack_prediction, round_up
 from .vecchia import _masked_cov
 
 
@@ -54,6 +54,7 @@ class TrainIndex:
     xs: np.ndarray         # (n, d) scaled inputs (structure space)
     beta: np.ndarray       # (d,) structure scaling
     blocks: BlockStructure # coarse blocks for the filtered kNN
+    flat: _FlatBlocks | None = None  # flattened block members, built once
 
 
 def build_train_index(
@@ -64,18 +65,19 @@ def build_train_index(
     n_workers: int = 1,
     seed: int = 0,
 ) -> TrainIndex:
-    """Scale + coarse-block the training set once; reused per chunk."""
+    """Scale + coarse-block the training set once; reused per chunk.
+
+    The flattened block index (``_FlatBlocks``) is cached here: it holds
+    the full n x d gather of block members that ``filtered_knn_points``
+    would otherwise rebuild on every query chunk."""
     x_train = np.asarray(x_train, dtype=np.float64)
     y_train = np.asarray(y_train, dtype=np.float64)
     beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (x_train.shape[1],))
     xs = scale_inputs(x_train, beta)
     bc_train = max(1, x_train.shape[0] // max(4 * m_pred, 64))
     blocks = build_blocks(xs, bc_train, n_workers, beta, seed=seed)
-    return TrainIndex(x=x_train, y=y_train, xs=xs, beta=beta, blocks=blocks)
-
-
-def _round_up(n: int, mult: int) -> int:
-    return ((n + mult - 1) // mult) * mult
+    return TrainIndex(x=x_train, y=y_train, xs=xs, beta=beta, blocks=blocks,
+                      flat=_FlatBlocks(xs, blocks))
 
 
 def scatter_packed(packed: PackedPrediction, *pairs) -> None:
@@ -110,11 +112,12 @@ def pack_queries(
     xs_test = scale_inputs(x_test, index.beta)
     bc_pred = max(1, n_test // bs_pred)
     test_blocks = build_blocks(xs_test, bc_pred, n_workers, index.beta, seed=seed + 1)
-    neigh = filtered_knn_points(index.xs, index.blocks, test_blocks.centers, m_pred, alpha)
+    neigh = filtered_knn_points(index.xs, index.blocks, test_blocks.centers,
+                                m_pred, alpha, flat=index.flat)
 
     bs_max = max(mb.size for mb in test_blocks.members)
     if pad_shapes:
-        bs_max = _round_up(bs_max, 8)
+        bs_max = round_up(bs_max, 8)
     packed = pack_prediction(
         x_test, index.x, index.y, test_blocks, neigh, m_pred, bs_max=bs_max,
         dtype=dtype,
@@ -122,7 +125,7 @@ def pack_queries(
     if offset:
         packed.q_idx[packed.q_mask] += offset
     if pad_shapes:
-        packed = packed.pad_to_blocks(_round_up(packed.n_blocks, 8))
+        packed = packed.pad_to_blocks(round_up(packed.n_blocks, 8))
     return packed
 
 
@@ -177,15 +180,20 @@ def batched_block_predict(
 ):
     """Conditional mean/variance for every prediction block in one jitted
     call on packed arrays: (bc, bs_pred) each. Padded query slots carry
-    mu=0 / var=prior; drop them with the mask."""
+    mu=0 / var=prior; drop them with the mask.
+
+    Backends: ``ref`` (vmapped jnp, differentiable), ``pallas`` (fused
+    kernel on the given shapes), ``pallas_tiled`` (fused kernel on
+    8x128-aligned tiles — the compiled f32 TPU serving path)."""
     if backend == "ref":
         return jax.vmap(
             lambda a, b, c, d, e: _predict_one(params, nu, a, b, c, d, e)
         )(q_x, q_mask, nn_x, nn_y, nn_mask)
-    if backend == "pallas":
+    if backend in ("pallas", "pallas_tiled"):
         from repro.kernels import ops as kops
 
-        return kops.sbv_predict(params, q_x, q_mask, nn_x, nn_y, nn_mask, nu=nu)
+        return kops.sbv_predict(params, q_x, q_mask, nn_x, nn_y, nn_mask, nu=nu,
+                                tiled=backend == "pallas_tiled")
     raise ValueError(f"unknown backend {backend!r}")
 
 

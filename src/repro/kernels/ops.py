@@ -18,7 +18,7 @@ from repro.core.vecchia import batched_block_loglik
 
 from .matern_cov import matern_cov_pallas
 from .sbv_loglik import sbv_loglik_pallas
-from .sbv_predict import sbv_predict_pallas
+from .sbv_predict import sbv_predict_pallas, sbv_predict_tiled
 
 
 def _ref_total(params: KernelParams, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu):
@@ -67,15 +67,19 @@ def _bwd(nu, res, g):
 sbv_loglik.defvjp(_fwd, _bwd)
 
 
-def sbv_predict(params: KernelParams, q_x, q_mask, nn_x, nn_y, nn_mask, nu=3.5):
+def sbv_predict(params: KernelParams, q_x, q_mask, nn_x, nn_y, nn_mask, nu=3.5,
+                tiled: bool = False):
     """Batched block conditional mean/variance via the fused Pallas kernel.
 
     Returns ``(mu, var)`` each shaped (bc, bs_pred); padded query slots
     carry mu=0 / var=prior and must be dropped by the caller's mask.
+    ``tiled=True`` routes through ``sbv_predict_tiled`` (bs/m rounded to
+    the native 8x128 f32 tile — the compiled non-interpret TPU path).
     Serving-only path: not differentiable (prediction conditions on fixed
     fitted parameters; use the ref backend to differentiate)."""
     dtype = q_x.dtype
-    return sbv_predict_pallas(
+    fn = sbv_predict_tiled if tiled else sbv_predict_pallas
+    return fn(
         params.beta.astype(dtype),
         params.sigma2.astype(dtype),
         params.nugget.astype(dtype),

@@ -26,6 +26,8 @@ import jax
 from jax.experimental import pallas as pl
 import jax.numpy as jnp
 
+from repro.core.packing import tile_predict_shapes
+
 from .sbv_loglik import _cholesky_inplace, _forward_sub, _masked_cov_tile
 
 
@@ -106,3 +108,46 @@ def sbv_predict_pallas(
         ),
         interpret=interpret,
     )(beta, scal, q_x, q_mask, nn_x, nn_y, nn_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "interpret"))
+def sbv_predict_tiled(
+    beta, sigma2, nugget,
+    q_x, q_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+    interpret: bool | None = None,
+):
+    """Tile-aligned predict: pad bs -> multiple of 8 (sublane) and
+    m -> multiple of 128 (lane), run the fused kernel on the aligned f32
+    tiles, slice the outputs back to the caller's (bc, bs).
+
+    This is the compiled (non-interpret) TPU entry point: Mosaic lays the
+    per-block (m, m)/(m, bs) working set on native (8, 128) f32 tiles with
+    no relayout, and the MXU contractions run at full-lane occupancy. The
+    identity-padding contract keeps the added lanes inert (zero masks =>
+    unit-diagonal Cholesky rows, zero cross-covariance), so outputs match
+    the unaligned shapes exactly; padding happens INSIDE the jit so the
+    caller's shapes stay the cache key.
+
+    On TPU the inputs must be f32 (the compiled kernel's native dtype);
+    interpret mode (CPU) accepts f64 as well.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not interpret and q_x.dtype != jnp.float32:
+        raise TypeError(
+            f"compiled TPU predict kernel needs float32 inputs, got {q_x.dtype}"
+        )
+    bc, bs, _ = q_x.shape
+    m = nn_x.shape[1]
+    bs_t, m_t = tile_predict_shapes(bs, m)
+
+    pad1 = lambda a, width: jnp.pad(a, ((0, 0), (0, width - a.shape[1]))
+                                    + ((0, 0),) * (a.ndim - 2))
+    mu, var = sbv_predict_pallas(
+        beta, sigma2, nugget,
+        pad1(q_x, bs_t), pad1(q_mask, bs_t),
+        pad1(nn_x, m_t), pad1(nn_y, m_t), pad1(nn_mask, m_t),
+        nu=nu, interpret=interpret,
+    )
+    return mu[:, :bs], var[:, :bs]

@@ -5,13 +5,19 @@ LM mode (default): prefill + decode loop with a sharded KV cache.
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --batch 4 --prompt-len 64 --max-new 32 --mesh 1x1
 
-GP mode: chunked SBV prediction (paper Eq. 3) — the training index is
-built once, then arbitrary n_test streams through fixed-shape jitted
-chunks so device memory stays bounded no matter how many queries arrive.
+GP mode: persistent SBV prediction service (paper Eq. 3; docs/serving.md).
+A ``GPServer`` builds the training index + compiled predict program once,
+then serves a stream of asynchronous requests: the micro-batcher coalesces
+them into fixed-shape padded batches and each batch runs the
+double-buffered chunk pipeline (host packs chunk k+1 while the device
+computes chunk k).
 
     PYTHONPATH=src python -m repro.launch.serve gp --n-train 20000 \
         --n-test 100000 --chunk 4096 --bs-pred 25 --m-pred 120 \
-        --backend pallas --workers 4
+        --backend pallas_tiled --dtype f32 --workers 4 --requests 64
+
+``--compare`` additionally races the synchronous chunk loop against the
+double-buffered pipeline on the same workload and cross-checks parity.
 """
 from __future__ import annotations
 
@@ -31,10 +37,16 @@ from repro.launch.train import make_mesh
 
 
 def serve_gp(argv=None):
-    """Chunked SBV prediction server (bounded memory for arbitrary n_test).
+    """Persistent micro-batching SBV prediction service.
 
-    ``--workers k`` shards each chunk's prediction blocks over a k-device
-    mesh (``distributed_predict``); the scatter stays host-side."""
+    The test set is split into ``--requests`` asynchronous requests that
+    are submitted concurrently; the server coalesces them into padded
+    micro-batches and runs each through the double-buffered chunk
+    pipeline. ``--workers k`` shards every chunk's prediction blocks over
+    a k-device mesh (``distributed_predict``); the scatter stays
+    host-side. ``--pipeline sync`` falls back to the strictly serial
+    chunk loop (the pre-server behavior), and ``--compare`` races both
+    on the same workload."""
     ap = argparse.ArgumentParser("serve gp")
     ap.add_argument("--dataset", default="synthetic",
                     choices=["synthetic", "satdrag", "metarvm"])
@@ -43,20 +55,34 @@ def serve_gp(argv=None):
     ap.add_argument("--chunk", type=int, default=4096)
     ap.add_argument("--bs-pred", type=int, default=25)
     ap.add_argument("--m-pred", type=int, default=120)
-    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
+    ap.add_argument("--backend", default="ref",
+                    choices=["ref", "pallas", "pallas_tiled"])
     ap.add_argument("--dtype", default="f64", choices=["f32", "f64"],
                     help="packed-array precision; use f32 for the compiled "
                          "(non-interpret) TPU Pallas kernel")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="split the test set into this many concurrent "
+                         "requests (exercises the micro-batcher)")
+    ap.add_argument("--max-points", type=int, default=None,
+                    help="micro-batch dispatch threshold (default: --chunk)")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="max batching delay after the first queued request")
+    ap.add_argument("--pipeline", default="double", choices=["double", "sync"],
+                    help="double = overlap host packing with device compute")
+    ap.add_argument("--compare", action="store_true",
+                    help="race sync vs double-buffered on the same workload "
+                         "and cross-check parity against predict_sbv")
     args = ap.parse_args(argv)
     dtype = np.float32 if args.dtype == "f32" else np.float64
 
-    from repro.core.predict import (
-        build_train_index, iter_query_chunks, packed_predict, scatter_packed,
-    )
     from repro.data.gp_sim import paper_synthetic
     from repro.launch.fit_gp import load_dataset
+    from repro.serving import (
+        BatchingPolicy, GPServer, GPServerConfig, PipelineConfig,
+        predict_pipelined, predict_synchronous,
+    )
 
     if args.dataset == "synthetic":
         x, y, params = paper_synthetic(args.seed, args.n_train)
@@ -71,47 +97,83 @@ def serve_gp(argv=None):
     rng = np.random.default_rng(args.seed + 1)
     x_test = rng.uniform(size=(args.n_test, x.shape[1]))
 
-    t0 = time.time()
-    index = build_train_index(x, y, np.asarray(params.beta), args.m_pred,
-                              n_workers=args.workers, seed=args.seed)
-    print(f"[serve-gp] train index over {len(y)} pts: {time.time()-t0:.2f}s")
-
     mesh = None
     if args.workers > 1:
         from repro.launch.mesh import make_worker_mesh
 
         mesh = make_worker_mesh(args.workers)
 
-    mean = np.zeros(args.n_test)
-    var = np.zeros(args.n_test)
-    t0 = time.time()
-    n_chunks = 0
-    for ci, packed in iter_query_chunks(
-        index, x_test, args.bs_pred, args.m_pred, seed=args.seed,
-        n_workers=args.workers, chunk_size=args.chunk, dtype=dtype,
-    ):
-        tc = time.time()
-        if mesh is not None:
-            from repro.core.distributed import (
-                distributed_predict, shard_prediction_by_owner,
-            )
+    pipe_cfg = PipelineConfig(
+        bs_pred=args.bs_pred, m_pred=args.m_pred, backend=args.backend,
+        dtype=dtype, chunk_size=args.chunk, n_workers=args.workers,
+    )
+    cfg = GPServerConfig(
+        pipeline=pipe_cfg,
+        policy=BatchingPolicy(max_points=args.max_points or args.chunk,
+                              max_wait_s=args.max_wait_ms / 1e3),
+        pipelined=args.pipeline == "double",
+        seed=args.seed,
+    )
 
-            packed = shard_prediction_by_owner(packed, args.workers)
-            mu_b, var_b = distributed_predict(params, packed, mesh,
-                                              backend=args.backend)
-        else:
-            mu_b, var_b = packed_predict(params, packed, backend=args.backend)
-        scatter_packed(packed, (mu_b, mean), (var_b, var))
-        n_chunks += 1
-        if ci < 3 or ci % 16 == 0:
-            print(f"[serve-gp] chunk {ci}: {packed.n_queries} pts "
-                  f"(bc={packed.n_blocks}, bs={packed.bs_pred}) "
-                  f"{time.time()-tc:.3f}s")
-    dt = time.time() - t0
-    print(f"[serve-gp] {args.n_test} predictions in {dt:.2f}s over {n_chunks} "
-          f"chunks: {args.n_test/dt:.0f} pts/s (backend={args.backend}, "
-          f"workers={args.workers})")
+    t0 = time.time()
+    server = GPServer(params, x, y, cfg, mesh=mesh)
+    print(f"[serve-gp] train index over {len(y)} pts: {time.time()-t0:.2f}s")
+
+    with server:
+        t0 = time.time()
+        server.warmup()
+        print(f"[serve-gp] warmup (compile): {time.time()-t0:.2f}s")
+
+        # Concurrent request stream: near-equal splits of the test set.
+        bounds = np.linspace(0, args.n_test, args.requests + 1).astype(int)
+        t0 = time.time()
+        futs = [server.submit(x_test[a:b])
+                for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+        results = [f.result() for f in futs]
+        dt = time.time() - t0
+
+    mean = np.concatenate([r.mean for r in results])
+    var = np.concatenate([r.var for r in results])
+    stats = server.stats.summary()
+    print(f"[serve-gp] {args.n_test} predictions / {len(futs)} requests in "
+          f"{dt:.2f}s: {args.n_test/dt:.0f} pts/s (backend={args.backend}, "
+          f"workers={args.workers}, pipeline={args.pipeline})")
+    print(f"[serve-gp] batches={stats['n_batches']} "
+          f"occupancy={stats['mean_batch_points']:.0f} pts/batch "
+          f"latency p50={stats['latency_p50_s']*1e3:.1f}ms "
+          f"p95={stats['latency_p95_s']*1e3:.1f}ms "
+          f"compiled-shapes={stats['n_compiled_shapes']}")
     assert np.all(np.isfinite(mean)) and np.all(var > 0)
+
+    if args.compare:
+        from repro.core.predict import predict_sbv
+
+        # Warm the jit cache on the exact chunk-shape sequence first so the
+        # race measures steady-state serving, not compilation.
+        predict_synchronous(params, server.index, x_test, pipe_cfg,
+                            seed=args.seed, mesh=mesh)
+        for name, runner in (("sync", predict_synchronous),
+                             ("double", predict_pipelined)):
+            t0 = time.time()
+            m_r, v_r = runner(params, server.index, x_test, pipe_cfg,
+                              seed=args.seed, mesh=mesh)
+            dt_r = time.time() - t0
+            print(f"[serve-gp] compare {name:6s}: {dt_r:.2f}s "
+                  f"({args.n_test/dt_r:.0f} pts/s)")
+            if name == "sync":
+                m_sync, v_sync = m_r, v_r
+        err = max(abs(m_r - m_sync).max(), abs(v_r - v_sync).max())
+        print(f"[serve-gp] compare parity double vs sync: max|delta|={err:.2e}")
+        assert err == 0.0, "pipelined chunk loop must be bitwise equal to sync"
+        ref = predict_sbv(params, x, y, x_test, bs_pred=args.bs_pred,
+                          m_pred=args.m_pred, seed=args.seed, n_sims=2,
+                          chunk_size=args.chunk, n_workers=args.workers,
+                          backend="ref", dtype=dtype)
+        err = max(abs(m_r - ref.mean).max(), abs(v_r - ref.var).max())
+        tol = 1e-5 if dtype == np.float64 else 1e-3
+        print(f"[serve-gp] compare parity vs predict_sbv: max|delta|={err:.2e}")
+        assert err <= tol, err
+
     # Serving returns the analytic conditionals only; conditional-simulation
     # UQ (paper §5.1.5) is the library path: predict_sbv(..., n_sims=...).
     return mean, var

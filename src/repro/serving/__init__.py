@@ -1,0 +1,16 @@
+# Persistent batched GP serving (docs/serving.md):
+#   batching.py  — request micro-batching (max-size/max-wait policy)
+#   pipeline.py  — double-buffered chunk pipeline (pack k+1 || compute k)
+#   server.py    — GPServer: owns the train index + compiled predict program
+#   telemetry.py — per-request latency + batch-occupancy stats
+from .batching import BatchingPolicy, MicroBatcher, PredictRequest
+from .pipeline import PipelineConfig, predict_pipelined, predict_synchronous
+from .server import GPServer, GPServerConfig, ServeResult
+from .telemetry import RequestTrace, ServerStats
+
+__all__ = [
+    "BatchingPolicy", "MicroBatcher", "PredictRequest",
+    "PipelineConfig", "predict_pipelined", "predict_synchronous",
+    "GPServer", "GPServerConfig", "ServeResult",
+    "RequestTrace", "ServerStats",
+]

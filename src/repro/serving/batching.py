@@ -1,0 +1,151 @@
+"""Request micro-batching for the persistent GP server.
+
+The workload shape (VPPE-style emulation: many concurrent small queries)
+wants the opposite of the one-shot CLI loop: requests of arbitrary size
+arrive asynchronously and must be coalesced into device-efficient
+micro-batches without letting any single request wait unboundedly.
+
+Policy (the classic max-size/max-wait pair):
+
+* a batch DISPATCHES as soon as it holds >= ``max_points`` query points
+  (enough to fill the packed device program), and
+* a non-empty batch never waits longer than ``max_wait_s`` after its
+  first request arrived (latency bound under light load).
+
+Coalesced requests are concatenated into one query array; the packed
+prediction pipeline then sees a single test set, so micro-batched results
+are IDENTICAL to a single ``predict_sbv`` call on the concatenation (the
+equivalence the serving tests pin down).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .telemetry import RequestTrace, now
+
+
+@dataclass
+class BatchingPolicy:
+    """Dispatch thresholds for the micro-batcher."""
+
+    max_points: int = 4096     # dispatch once this many points are queued
+    max_wait_s: float = 0.010  # ... or this long after the first request
+    max_requests: int = 1024   # hard cap on requests per batch
+
+
+@dataclass
+class PredictRequest:
+    """One in-flight request: a query array + the future holding its slice
+    of the micro-batch result."""
+
+    x: np.ndarray
+    future: Future
+    trace: RequestTrace = field(init=False)
+
+    def __post_init__(self):
+        self.trace = RequestTrace(n_points=self.x.shape[0])
+
+
+class MicroBatcher:
+    """Blocking queue + coalescing loop shared by the server's worker.
+
+    ``put`` is called from request threads; ``next_batch`` is called by
+    the single dispatch thread and returns a list of requests forming one
+    micro-batch (or an empty list on timeout so the caller can check for
+    shutdown). A ``flush`` wakes the dispatcher immediately.
+    """
+
+    _FLUSH = object()
+
+    def __init__(self, policy: BatchingPolicy):
+        self.policy = policy
+        self._q: queue.Queue = queue.Queue()
+        self._closed = threading.Event()
+
+    def put(self, req: PredictRequest) -> None:
+        if self._closed.is_set():
+            raise RuntimeError("server is stopped")
+        self._q.put(req)
+
+    def flush(self) -> None:
+        """Force the dispatcher to emit whatever is queued right now."""
+        self._q.put(self._FLUSH)
+
+    def close(self) -> None:
+        self._closed.set()
+        self._q.put(self._FLUSH)  # wake the dispatcher
+
+    def drain_pending(self) -> list[PredictRequest]:
+        """Remove and return whatever is still queued (post-close cleanup:
+        a ``put`` can race ``close`` and land after the dispatcher's final
+        drain — the server fails these futures instead of stranding them)."""
+        pending: list[PredictRequest] = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                return pending
+            if item is not self._FLUSH:
+                pending.append(item)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    def next_batch(self, idle_timeout_s: float = 0.05) -> list[PredictRequest]:
+        """Coalesce queued requests into one micro-batch.
+
+        Blocks up to ``idle_timeout_s`` for the first request; once one
+        arrives, keeps accumulating until the policy's max_points /
+        max_requests trip or max_wait_s elapses (or a flush arrives).
+
+        Requests already sitting in the queue are ALWAYS drained (up to
+        the size caps) regardless of the deadline: a backlog that built
+        up while the previous batch was computing costs zero extra
+        latency to coalesce, and waiting only applies when the queue has
+        gone empty before the window closed.
+        """
+        pol = self.policy
+        batch: list[PredictRequest] = []
+        points = 0
+        try:
+            first = self._q.get(timeout=idle_timeout_s)
+        except queue.Empty:
+            return batch
+        if first is self._FLUSH:
+            return batch
+        batch.append(first)
+        points += first.x.shape[0]
+        deadline = first.trace.t_submit + pol.max_wait_s
+
+        while (points < pol.max_points and len(batch) < pol.max_requests
+               and not self._closed.is_set()):
+            try:
+                nxt = self._q.get_nowait()   # drain backlog unconditionally
+            except queue.Empty:
+                remaining = deadline - now()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=remaining)
+                except queue.Empty:
+                    break
+            if nxt is self._FLUSH:
+                break
+            batch.append(nxt)
+            points += nxt.x.shape[0]
+        return batch
+
+
+def concat_requests(batch: list[PredictRequest]) -> tuple[np.ndarray, list[slice]]:
+    """Stack request arrays into one query set + per-request result slices."""
+    sizes = [req.x.shape[0] for req in batch]
+    offsets = np.concatenate([[0], np.cumsum(sizes)])
+    x = np.concatenate([req.x for req in batch], axis=0)
+    slices = [slice(int(offsets[i]), int(offsets[i + 1])) for i in range(len(batch))]
+    return x, slices

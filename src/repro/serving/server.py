@@ -1,0 +1,223 @@
+"""Persistent batched GP serving process (the paper's throughput story,
+made a long-running service instead of a one-shot CLI loop).
+
+``GPServer`` owns the train-side state exactly once —
+
+* the ``TrainIndex`` (scaled inputs, coarse blocks, cached flat block
+  index for the filtered kNN), and
+* the compiled predict program (the jit cache of
+  ``batched_block_predict`` / the fused Pallas kernel),
+
+then serves asynchronous predict requests of arbitrary size forever:
+requests are coalesced into fixed-shape padded micro-batches by the
+max-size/max-wait policy (``batching.py``) and each micro-batch streams
+through the double-buffered chunk pipeline (``pipeline.py``), so host
+packing of chunk k+1 overlaps device compute of chunk k.
+
+Shape stability: chunked packing rounds (bc, bs) to multiples of 8 and
+the ``pallas_tiled`` backend rounds (bs, m) to the native 8x128 f32 tile
+inside the jit, so steady-state traffic hits a handful of compile-cache
+keys no matter how request sizes vary (``stats()['n_compiled_shapes']``).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.kernels_math import KernelParams
+from repro.core.predict import TrainIndex, build_train_index
+
+from .batching import BatchingPolicy, MicroBatcher, PredictRequest, concat_requests
+from .pipeline import PipelineConfig, predict_pipelined, predict_synchronous
+from .telemetry import ServerStats, now
+
+
+@dataclass
+class ServeResult:
+    """Per-request slice of a micro-batch result."""
+
+    mean: np.ndarray
+    var: np.ndarray
+    latency_s: float
+    queue_wait_s: float
+
+
+@dataclass
+class GPServerConfig:
+    """Everything the server needs beyond the fitted kernel parameters."""
+
+    pipeline: PipelineConfig = field(default_factory=PipelineConfig)
+    policy: BatchingPolicy = field(default_factory=BatchingPolicy)
+    pipelined: bool = True    # False = synchronous chunk loop (baseline)
+    seed: int = 0
+
+
+class GPServer:
+    """Persistent micro-batching SBV prediction server.
+
+    Usage::
+
+        server = GPServer(params, x_train, y_train, config)
+        with server:                       # starts the dispatch thread
+            fut = server.submit(x_query)   # returns concurrent.futures.Future
+            res = fut.result()             # ServeResult(mean, var, latency)
+
+    Requests submitted within one batching window are coalesced; because
+    coalescing just concatenates query arrays before the shared packed
+    pipeline, per-request results equal the matching slices of a single
+    ``predict_sbv`` call on the concatenation.
+    """
+
+    def __init__(
+        self,
+        params: KernelParams,
+        x_train: np.ndarray,
+        y_train: np.ndarray,
+        config: GPServerConfig | None = None,
+        beta_struct: np.ndarray | None = None,
+        mesh=None,
+    ):
+        self.params = params
+        self.config = config or GPServerConfig()
+        self.mesh = mesh
+        self.stats = ServerStats()
+        beta = np.asarray(params.beta if beta_struct is None else beta_struct)
+        cfg = self.config.pipeline
+        self.index: TrainIndex = build_train_index(
+            x_train, y_train, beta, cfg.m_pred,
+            n_workers=cfg.n_workers, seed=self.config.seed,
+        )
+        self.d = self.index.x.shape[1]
+        self._batcher = MicroBatcher(self.config.policy)
+        self._thread: threading.Thread | None = None
+        self._n_batches = 0
+
+    # -- lifecycle -----------------------------------------------------
+
+    def start(self) -> "GPServer":
+        if self._thread is not None:
+            return self
+        if self._batcher.closed:  # restart after stop(): fresh batcher
+            self._batcher = MicroBatcher(self.config.policy)
+        self._thread = threading.Thread(
+            target=self._dispatch_loop, name="gp-server", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self, timeout_s: float = 120.0) -> None:
+        """Drain pending requests, then stop the dispatch thread.
+
+        Raises ``TimeoutError`` if the dispatch thread is still processing
+        after ``timeout_s`` (the server is NOT stopped in that case).
+        Requests that raced ``stop`` and were never picked up get their
+        futures failed rather than stranded."""
+        if self._thread is None:
+            return
+        self._batcher.close()
+        self._thread.join(timeout=timeout_s)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"gp-server dispatch thread still busy after {timeout_s}s"
+            )
+        self._thread = None
+        for req in self._batcher.drain_pending():
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_exception(RuntimeError("server stopped"))
+
+    def __enter__(self) -> "GPServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- request path --------------------------------------------------
+
+    def submit(self, x: np.ndarray) -> Future:
+        """Enqueue a predict request; resolves to a ``ServeResult``."""
+        if self._thread is None:
+            raise RuntimeError("GPServer.submit before start()")
+        x = np.array(x, dtype=np.float64, copy=True)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self.d:
+            raise ValueError(f"expected (n, {self.d}) queries, got {x.shape}")
+        req = PredictRequest(x=x, future=Future())
+        self._batcher.put(req)
+        return req.future
+
+    def predict(self, x: np.ndarray, timeout_s: float | None = None) -> ServeResult:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(x).result(timeout=timeout_s)
+
+    def flush(self) -> None:
+        """Dispatch whatever is queued without waiting out the batch window."""
+        self._batcher.flush()
+
+    def warmup(self, n_points: int | None = None) -> ServeResult:
+        """Push one synthetic batch through to populate the jit cache before
+        real traffic arrives (first-compile cost off the critical path)."""
+        n = n_points or max(self.config.pipeline.bs_pred * 8, 64)
+        rng = np.random.default_rng(self.config.seed + 17)
+        lo = self.index.x.min(axis=0)
+        hi = self.index.x.max(axis=0)
+        x = lo + (hi - lo) * rng.uniform(size=(n, self.d))
+        fut = self.submit(x)
+        self.flush()
+        return fut.result()
+
+    # -- dispatch ------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = self._batcher.next_batch()
+            if batch:
+                try:
+                    self._process(batch)
+                except BaseException as exc:
+                    # _process resolves per-request failures itself; anything
+                    # escaping here must not kill the sole dispatch thread.
+                    for req in batch:
+                        if not req.future.done():
+                            req.future.set_exception(exc)
+            elif self._batcher.closed:
+                return
+
+    def _process(self, batch: list[PredictRequest]) -> None:
+        t_dispatch = now()
+        # Claim each future; drop requests whose client cancelled while
+        # queued (set_result on a cancelled future raises InvalidStateError).
+        batch = [req for req in batch
+                 if req.future.set_running_or_notify_cancel()]
+        if not batch:
+            return
+        for req in batch:
+            req.trace.t_dispatch = t_dispatch
+        x, slices = concat_requests(batch)
+        self.stats.record_batch(len(batch), x.shape[0])
+        # Deterministic per-batch seed, equal to the base seed for the first
+        # batch so a fresh server reproduces predict_sbv exactly.
+        seed = self.config.seed + 100003 * self._n_batches
+        self._n_batches += 1
+        runner = predict_pipelined if self.config.pipelined else predict_synchronous
+        try:
+            mean, var = runner(
+                self.params, self.index, x, self.config.pipeline,
+                seed=seed, mesh=self.mesh, stats=self.stats,
+            )
+        except BaseException as exc:
+            for req in batch:
+                req.future.set_exception(exc)
+            return
+        t_done = now()
+        for req, sl in zip(batch, slices):
+            req.trace.t_done = t_done
+            self.stats.record_request(req.trace)
+            req.future.set_result(ServeResult(
+                mean=mean[sl].copy(), var=var[sl].copy(),
+                latency_s=req.trace.latency_s,
+                queue_wait_s=req.trace.queue_wait_s,
+            ))

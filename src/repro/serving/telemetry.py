@@ -1,0 +1,107 @@
+"""Per-request latency + batching telemetry for the persistent GP server.
+
+Every request carries a trace (submit -> dispatch -> done); the server
+aggregates them under a lock so `GPServer.stats()` can report queue wait,
+end-to-end latency percentiles, micro-batch occupancy, and how many
+distinct compiled shapes the jit cache saw (the shape-stability signal:
+a healthy steady state converges to a handful of keys and stops growing).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+
+def now() -> float:
+    return time.perf_counter()
+
+
+@dataclass
+class RequestTrace:
+    """Timeline of one predict request through the server."""
+
+    n_points: int
+    t_submit: float = field(default_factory=now)
+    t_dispatch: float = 0.0   # when its micro-batch left the queue
+    t_done: float = 0.0       # when its future resolved
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(0.0, self.t_dispatch - self.t_submit)
+
+    @property
+    def latency_s(self) -> float:
+        return max(0.0, self.t_done - self.t_submit)
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    k = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[k]
+
+
+class ServerStats:
+    """Thread-safe aggregate counters for one ``GPServer`` lifetime.
+
+    Counters are exact over the lifetime; the per-request/per-batch
+    samples behind the percentiles are a sliding window (``window``
+    most recent) so a server that runs forever holds bounded memory."""
+
+    def __init__(self, window: int = 4096):
+        self._lock = threading.Lock()
+        self.n_requests = 0
+        self.n_points = 0
+        self.n_batches = 0
+        self.n_chunks = 0
+        self.batch_sizes: deque[int] = deque(maxlen=window)    # reqs/batch
+        self.batch_points: deque[int] = deque(maxlen=window)   # pts/batch
+        self.latencies_s: deque[float] = deque(maxlen=window)
+        self.queue_waits_s: deque[float] = deque(maxlen=window)
+        self.compiled_shapes: set[tuple] = set()  # (bc, bs, m) seen by jit
+        self.t_start = now()
+
+    def record_batch(self, n_requests: int, n_points: int) -> None:
+        with self._lock:
+            self.n_batches += 1
+            self.batch_sizes.append(n_requests)
+            self.batch_points.append(n_points)
+
+    def record_chunk_shape(self, bc: int, bs: int, m: int) -> None:
+        with self._lock:
+            self.n_chunks += 1
+            self.compiled_shapes.add((bc, bs, m))
+
+    def record_request(self, trace: RequestTrace) -> None:
+        with self._lock:
+            self.n_requests += 1
+            self.n_points += trace.n_points
+            self.latencies_s.append(trace.latency_s)
+            self.queue_waits_s.append(trace.queue_wait_s)
+
+    def summary(self) -> dict:
+        with self._lock:
+            lat = sorted(self.latencies_s)
+            waits = sorted(self.queue_waits_s)
+            elapsed = max(now() - self.t_start, 1e-9)
+            return {
+                "n_requests": self.n_requests,
+                "n_points": self.n_points,
+                "n_batches": self.n_batches,
+                "n_chunks": self.n_chunks,
+                "points_per_s": self.n_points / elapsed,
+                "mean_batch_requests": (
+                    sum(self.batch_sizes) / len(self.batch_sizes)
+                    if self.batch_sizes else 0.0
+                ),
+                "mean_batch_points": (
+                    sum(self.batch_points) / len(self.batch_points)
+                    if self.batch_points else 0.0
+                ),
+                "latency_p50_s": _percentile(lat, 0.50),
+                "latency_p95_s": _percentile(lat, 0.95),
+                "queue_wait_p50_s": _percentile(waits, 0.50),
+                "n_compiled_shapes": len(self.compiled_shapes),
+            }

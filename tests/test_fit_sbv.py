@@ -1,0 +1,68 @@
+"""Regression tests for the MLE fit (paper Alg. 1 outer loop).
+
+Pins three behaviors that the suite previously never checked:
+
+* the gradient path actually optimizes: nll/n decreases
+  monotonically-ish over inner steps (Adam may oscillate locally but the
+  running best must keep improving and the final loss must land far
+  below the start);
+* the fitted beta recovers the ANISOTROPY ORDERING of the
+  ``paper_synthetic`` generator (relevant dims 0-1 have true beta=0.05,
+  the rest 5.0 — relevance estimation is the paper's Fig. 6/7 claim);
+* the paper-faithful derivative-free path (``fit_neldermead``) reaches
+  the same loss basin (smoke parity with the gradient path).
+"""
+import numpy as np
+import pytest
+
+from repro.core.fit import fit_neldermead, fit_sbv
+from repro.core.pipeline import SBVConfig
+from repro.data.gp_sim import paper_synthetic
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, y, params = paper_synthetic(seed=0, n=400, d=4)
+    cfg = SBVConfig(n_blocks=24, m=24, seed=0)
+    res = fit_sbv(x, y, cfg, inner_steps=40, outer_rounds=2, lr=0.1)
+    return x, y, cfg, res
+
+
+def test_fit_sbv_nll_decreases(fitted):
+    _, _, _, res = fitted
+    losses = [h[2] for h in res.history]
+    assert np.all(np.isfinite(losses))
+    # Strong overall decrease: the synthetic start is O(10^2), the optimum
+    # is O(1) negative.
+    assert losses[-1] < losses[0] - 10.0, (losses[0], losses[-1])
+    # Monotonically-ish: the running best improves through the schedule
+    # and local oscillations stay a minority of steps.
+    running_best = np.minimum.accumulate(losses)
+    assert running_best[len(losses) // 2] < losses[0] - 5.0
+    n_increase = sum(1 for a, b in zip(losses, losses[1:]) if b > a + 1e-9)
+    assert n_increase <= 0.4 * (len(losses) - 1), n_increase
+    # Final loss is the best region visited (no late divergence).
+    assert losses[-1] <= running_best[-1] + 1.0
+
+
+def test_fit_sbv_recovers_anisotropy_ordering(fitted):
+    _, _, _, res = fitted
+    beta = np.exp(np.asarray(res.params.log_beta))
+    relevant, irrelevant = beta[:2], beta[2:]
+    # Every relevant dim must come out more relevant (smaller beta) than
+    # every irrelevant dim, with a clear margin in the mean.
+    assert relevant.max() < irrelevant.min(), beta
+    assert relevant.mean() < 0.25 * irrelevant.mean(), beta
+
+
+def test_fit_neldermead_smoke_parity(fitted):
+    x, y, cfg, res = fitted
+    nm = fit_neldermead(x, y, cfg, maxiter=150)
+    nll_grad = res.history[-1][2]
+    nll_nm = nm.history[-1][2]
+    # Paper-faithful derivative-free path lands in the same basin: both
+    # far below the ~O(10^2) start, within a couple nats/point of each
+    # other (NM at 150 iters is expected to trail the analytic gradient).
+    assert np.isfinite(nll_nm)
+    assert nll_nm < 5.0, nll_nm
+    assert abs(nll_nm - nll_grad) < 2.5, (nll_nm, nll_grad)
