@@ -24,10 +24,14 @@ from repro.data.gp_sim import paper_synthetic
 from .common import parser, save, table
 
 
-def iter_time(x, y, beta, bs, m, seed, reps=3):
+def iter_time(x, y, beta, bs, m, seed, reps=3, n_buckets=None):
     n = x.shape[0]
     cfg = SBVConfig(n_blocks=max(1, n // bs), m=m, seed=seed)
     packed, _ = preprocess(x, y, beta, cfg)
+    if n_buckets:
+        from repro.core.buckets import bucket_blocks
+
+        packed = bucket_blocks(packed, n_buckets=n_buckets)
     loss = jax.jit(neg_loglik_fn(packed, 3.5, "ref"))
     params = KernelParams.create(sigma2=1.0, beta=beta, nugget=1e-4, d=x.shape[1])
     loss(params).block_until_ready()  # compile
@@ -43,6 +47,12 @@ def iter_time(x, y, beta, bs, m, seed, reps=3):
 
 def main(argv=None):
     ap = parser("fig8")
+    ap.add_argument("--bucketed", action="store_true",
+                    help="run the likelihood on the bucketed layout (4 "
+                         "geometric ceiling levels per dimension; realized "
+                         "buckets = occupied (bs, m) cells, up to 4^2 — see "
+                         "docs/packing.md) so the perf trajectory captures "
+                         "uniform-vs-bucketed on the same seed")
     args = ap.parse_args(argv)
     if args.scale == "smoke":
         ns, ms, bs_sbv = (2_000, 8_000), (20, 40, 80), 25
@@ -55,7 +65,8 @@ def main(argv=None):
         beta = np.asarray(params.beta)
         for m in ms:
             for name, bs in (("SV", 1), ("SBV", bs_sbv)):
-                dt, flops = iter_time(x, y, beta, bs, m, args.seed)
+                dt, flops = iter_time(x, y, beta, bs, m, args.seed,
+                                      n_buckets=4 if args.bucketed else None)
                 rows.append({
                     "method": name, "n": n, "m": m, "bs": bs,
                     "s/iter(cpu)": dt,
@@ -73,8 +84,10 @@ def main(argv=None):
         r["model-GFLOP/s@819GBps"] = r["GFLOP/iter"] / max(t_mem, t_cmp)
 
     table(rows, ["method", "n", "m", "bs", "s/iter(cpu)", "GFLOP/iter",
-                 "model-GFLOP/s@819GBps"], "Fig. 8: single-node SBV vs SV")
-    save("fig8_single_node", {"rows": rows})
+                 "model-GFLOP/s@819GBps"],
+          "Fig. 8: single-node SBV vs SV"
+          + (" (bucketed layout)" if args.bucketed else ""))
+    save("fig8_single_node", {"bucketed": args.bucketed, "rows": rows})
 
     # the algorithmic gap grows with m (paper Fig. 8); at the smallest m
     # the iteration is dispatch-dominated on CPU and timing-noisy, so the

@@ -36,6 +36,12 @@ from benchmarks.common import parser, save, table
 def main():
     ap = parser("serving_throughput")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--bucketed", action="store_true",
+                    help="serve size-bucketed micro-batches (4 geometric "
+                         "ceiling levels per dimension per chunk; realized "
+                         "buckets = occupied (bs, m) cells — docs/packing.md) "
+                         "so the perf trajectory captures uniform-vs-bucketed "
+                         "on the same seed")
     args = ap.parse_args()
 
     from repro.core.predict import predict_sbv
@@ -56,7 +62,8 @@ def main():
     x_test = rng.uniform(size=(n_test, x.shape[1]))
 
     pipe_cfg = PipelineConfig(bs_pred=bs, m_pred=m, chunk_size=chunk,
-                              backend=backend)
+                              backend=backend,
+                              n_buckets=4 if args.bucketed else None)
     cfg = GPServerConfig(
         pipeline=pipe_cfg,
         policy=BatchingPolicy(max_points=chunk, max_wait_s=0.005),
@@ -123,10 +130,11 @@ def main():
     print(f"server: latency p50={stats['latency_p50_s']*1e3:.0f}ms "
           f"p95={stats['latency_p95_s']*1e3:.0f}ms "
           f"occupancy={stats['mean_batch_points']:.0f} pts/batch "
-          f"compiled-shapes={stats['n_compiled_shapes']}")
+          f"compiled-shapes={stats['n_compiled_shapes']} "
+          f"padding-occupancy={stats['padding_occupancy']:.3f}")
 
     save("serving_throughput", {
-        "scale": args.scale, "backend": backend,
+        "scale": args.scale, "backend": backend, "bucketed": args.bucketed,
         "n_train": n_train, "n_test": n_test, "chunk": chunk,
         "bs_pred": bs, "m_pred": m, "n_requests": n_req,
         "t_index_s": t_index, "rows": rows, "speedup_double_vs_sync": speedup,

@@ -2,6 +2,9 @@
 from .kernels_math import KernelParams, cov_matrix, matern, scaled_sqdist
 from .exact_gp import exact_loglik, exact_predict
 from .packing import PackedBlocks, PackedPrediction
+from .buckets import (
+    BucketedBlocks, BucketedPrediction, bucket_blocks, bucket_prediction,
+)
 from .pipeline import SBVConfig, preprocess
 from .predict import (
     Prediction, batched_block_predict, build_train_index, iter_query_chunks,
@@ -14,6 +17,7 @@ __all__ = [
     "KernelParams", "cov_matrix", "matern", "scaled_sqdist",
     "exact_loglik", "exact_predict",
     "PackedBlocks", "PackedPrediction",
+    "BucketedBlocks", "BucketedPrediction", "bucket_blocks", "bucket_prediction",
     "SBVConfig", "preprocess",
     "Prediction", "batched_block_predict", "build_train_index",
     "iter_query_chunks", "pack_queries", "packed_predict", "predict_sbv",

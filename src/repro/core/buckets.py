@@ -1,0 +1,259 @@
+"""Bucketed variable-size block execution (the canonical packed layout).
+
+MAGMA — the paper's GPU backend — runs *variable-size* batched BLAS, so a
+skewed k-means block-size distribution costs what it costs. A single
+uniformly-padded batch (``PackedBlocks`` padded to the global ``bs_max``
+and a uniform ``m``) does not have that property: one 3x outlier block
+inflates every Cholesky/GEMM in the batch, and early-ordered blocks with
+tiny conditioning sets still pay the full ``m``-sized factorization.
+
+The bucketed layout recovers MAGMA's economics on fixed-shape hardware:
+blocks are partitioned into K size-buckets with geometric ``bs``/``m``
+ceilings (optionally tile-aligned per the TPU rules in ``packing.py``),
+and each bucket is a small ``PackedBlocks``/``PackedPrediction`` padded
+only to its own ceiling. Every consumer (likelihood, prediction,
+distribution, serving) loops jitted per-bucket programs — one compile per
+bucket *shape*, cached by jit — and sums logliks / scatters predictions.
+Identity padding makes each bucket's math equal to the uniform layout's
+(tested to 1e-10), so the only thing that changes is how much padded work
+the device does; the ``occupancy`` metric (true FLOPs / padded FLOPs)
+quantifies exactly that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .packing import (
+    TILE_LANE, TILE_SUBLANE, PackedBlocks, PackedPrediction, round_up,
+)
+
+
+def bucket_mults(backend: str) -> tuple[int, int]:
+    """(bs_mult, m_mult) bucket-ceiling alignment for a kernel backend.
+
+    The compiled TPU path wants 8x128-aligned shapes (see
+    ``packing.tile_predict_shapes``); everything else buckets to exact
+    geometric ceilings."""
+    if backend == "pallas_tiled":
+        return TILE_SUBLANE, TILE_LANE
+    return 1, 1
+
+
+def block_flops(bs, m):
+    """Per-block likelihood work model: bs * (bs + m)^2.
+
+    The joint-assembly path factorizes one (m+bs)x(m+bs) covariance; the
+    bs-conditional share of that factorization plus the solves is
+    O(bs * (bs+m)^2). Used for occupancy accounting and for balancing
+    distributed shards by *work* rather than block count."""
+    s = np.asarray(bs, dtype=np.float64)
+    t = np.asarray(m, dtype=np.float64)
+    return s * (s + t) ** 2
+
+
+def predict_flops(bs, m):
+    """Per-block prediction work model: chol(m) + joint solve vs bs RHS."""
+    s = np.asarray(bs, dtype=np.float64)
+    t = np.asarray(m, dtype=np.float64)
+    return t ** 3 / 3.0 + t * t * s + t * s
+
+
+def bucket_ceilings(sizes: np.ndarray, n_buckets: int, mult: int = 1) -> np.ndarray:
+    """Geometric bucket ceilings covering ``sizes``, rounded up to ``mult``.
+
+    Returns a sorted array of at most ``n_buckets`` distinct ceilings; the
+    last ceiling always covers ``max(sizes)``. Degenerate inputs (uniform
+    sizes, or ``mult`` coarser than the spread) collapse to one bucket —
+    the uniform layout is the K=1 special case, not a different code path.
+    """
+    sizes = np.asarray(sizes)
+    if sizes.size == 0:
+        return np.asarray([mult], dtype=np.int64)
+    lo = max(int(sizes.min()), 1)
+    hi = max(int(sizes.max()), 1)
+    if n_buckets <= 1 or hi <= lo:
+        return np.asarray([round_up(hi, mult)], dtype=np.int64)
+    edges = np.geomspace(lo, hi, num=n_buckets + 1)[1:]
+    ceils = sorted({round_up(int(np.ceil(e)), mult) for e in edges})
+    if ceils[-1] < hi:  # rounding can only round UP, but guard anyway
+        ceils.append(round_up(hi, mult))
+    return np.asarray(ceils, dtype=np.int64)
+
+
+def assign_buckets(sizes: np.ndarray, ceilings: np.ndarray) -> np.ndarray:
+    """Index of the smallest ceiling >= each size."""
+    idx = np.searchsorted(ceilings, np.asarray(sizes))
+    if idx.size and idx.max() >= ceilings.size:
+        raise ValueError("size exceeds the largest bucket ceiling")
+    return idx
+
+
+def _true_sizes(mask: np.ndarray) -> np.ndarray:
+    """Per-row count of real entries; asserts masks are contiguous prefixes
+    (the packing contract every bucket slice relies on)."""
+    counts = mask.sum(axis=1).astype(np.int64)
+    expect = np.arange(mask.shape[1])[None, :] < counts[:, None]
+    if not np.array_equal(mask.astype(bool), expect):
+        raise ValueError("mask is not a contiguous prefix; cannot bucket")
+    return counts
+
+
+@dataclass
+class BucketedBlocks:
+    """K per-shape batches replacing one uniformly-padded batch.
+
+    ``buckets[k]`` is a ``PackedBlocks`` padded to its own (bs, m) ceiling;
+    ``ranks[k]`` holds each block's leading-dim index in the source uniform
+    layout (= conditioning rank order), the scatter index that restores
+    global order for any per-block quantity."""
+
+    buckets: list
+    ranks: list
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_blocks(self) -> int:
+        return sum(pk.n_blocks for pk in self.buckets)
+
+    @property
+    def n_points(self) -> int:
+        return sum(pk.n_points for pk in self.buckets)
+
+    def occupancy(self) -> float:
+        """True/padded FLOP ratio under the likelihood work model."""
+        true, padded = loglik_work(self.buckets)
+        return true / padded if padded else 1.0
+
+
+@dataclass
+class BucketedPrediction:
+    """Prediction twin of ``BucketedBlocks``. Each bucket keeps its own
+    global ``q_idx``, so per-bucket results scatter directly into the
+    test-point-ordered output arrays — no extra reassembly index."""
+
+    buckets: list
+    ranks: list
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_blocks(self) -> int:
+        return sum(pk.n_blocks for pk in self.buckets)
+
+    @property
+    def n_queries(self) -> int:
+        return sum(pk.n_queries for pk in self.buckets)
+
+    def occupancy(self) -> float:
+        """True/padded FLOP ratio under the prediction work model."""
+        true, padded = prediction_work(self.buckets)
+        return true / padded if padded else 1.0
+
+
+def loglik_work(buckets: list) -> tuple[float, float]:
+    """(true, padded) likelihood FLOPs over a list of ``PackedBlocks``."""
+    true = padded = 0.0
+    for pk in buckets:
+        bs_t = pk.blk_mask.sum(axis=1)
+        m_t = pk.nn_mask.sum(axis=1)
+        true += float(np.sum(block_flops(bs_t, m_t)))
+        padded += pk.n_blocks * float(block_flops(pk.bs_max, pk.m))
+    return true, padded
+
+
+def prediction_work(buckets: list) -> tuple[float, float]:
+    """(true, padded) prediction FLOPs over a list of ``PackedPrediction``."""
+    true = padded = 0.0
+    for pk in buckets:
+        bs_t = pk.q_mask.sum(axis=1)
+        m_t = pk.nn_mask.sum(axis=1)
+        true += float(np.sum(predict_flops(bs_t, m_t)))
+        padded += pk.n_blocks * float(predict_flops(pk.bs_pred, pk.m_pred))
+    return true, padded
+
+
+def _group(bs_true, m_true, bs_ceils, m_ceils):
+    """Group block indices by (bs-ceiling, m-ceiling) cell, sorted so the
+    bucket sequence (and therefore the compile order) is deterministic."""
+    bs_a = assign_buckets(bs_true, bs_ceils)
+    m_a = assign_buckets(m_true, m_ceils)
+    cells: dict[tuple[int, int], list[int]] = {}
+    for b, key in enumerate(zip(bs_a.tolist(), m_a.tolist())):
+        cells.setdefault(key, []).append(b)
+    out = []
+    for key in sorted(cells):
+        idx = np.asarray(cells[key], dtype=np.int64)
+        out.append((int(bs_ceils[key[0]]), int(m_ceils[key[1]]), idx))
+    return out
+
+
+def bucket_blocks(
+    packed: PackedBlocks,
+    n_buckets: int = 4,
+    bs_mult: int = 1,
+    m_mult: int = 1,
+) -> BucketedBlocks:
+    """Partition a uniformly-padded ``PackedBlocks`` into size-buckets.
+
+    ``n_buckets`` bounds the geometric levels *per dimension* (bs and m);
+    the realized bucket count is the number of occupied (bs, m) cells,
+    which skew keeps far below ``n_buckets**2`` in practice. ``bs_mult`` /
+    ``m_mult`` align ceilings to hardware tiles (see
+    ``packing.tile_predict_shapes``) so bucket shapes stay compile-cache
+    friendly."""
+    bs_true = _true_sizes(packed.blk_mask)
+    m_true = _true_sizes(packed.nn_mask)
+    bs_ceils = bucket_ceilings(bs_true, n_buckets, bs_mult)
+    m_ceils = bucket_ceilings(m_true, n_buckets, m_mult)
+
+    buckets, ranks = [], []
+    for bs_c, m_c, idx in _group(bs_true, m_true, bs_ceils, m_ceils):
+        bs_c = min(bs_c, packed.bs_max)
+        m_c = min(m_c, packed.m)
+        buckets.append(PackedBlocks(
+            blk_x=packed.blk_x[idx, :bs_c],
+            blk_y=packed.blk_y[idx, :bs_c],
+            blk_mask=packed.blk_mask[idx, :bs_c],
+            nn_x=packed.nn_x[idx, :m_c],
+            nn_y=packed.nn_y[idx, :m_c],
+            nn_mask=packed.nn_mask[idx, :m_c],
+            owners=packed.owners[idx],
+        ))
+        ranks.append(idx)
+    return BucketedBlocks(buckets=buckets, ranks=ranks)
+
+
+def bucket_prediction(
+    packed: PackedPrediction,
+    n_buckets: int = 4,
+    bs_mult: int = 1,
+    m_mult: int = 1,
+) -> BucketedPrediction:
+    """Prediction twin of ``bucket_blocks`` (same ceiling policy)."""
+    bs_true = _true_sizes(packed.q_mask)
+    m_true = _true_sizes(packed.nn_mask)
+    bs_ceils = bucket_ceilings(bs_true, n_buckets, bs_mult)
+    m_ceils = bucket_ceilings(m_true, n_buckets, m_mult)
+
+    buckets, ranks = [], []
+    for bs_c, m_c, idx in _group(bs_true, m_true, bs_ceils, m_ceils):
+        bs_c = min(bs_c, packed.bs_pred)
+        m_c = min(m_c, packed.m_pred)
+        buckets.append(PackedPrediction(
+            q_x=packed.q_x[idx, :bs_c],
+            q_mask=packed.q_mask[idx, :bs_c],
+            q_idx=packed.q_idx[idx, :bs_c],
+            nn_x=packed.nn_x[idx, :m_c],
+            nn_y=packed.nn_y[idx, :m_c],
+            nn_mask=packed.nn_mask[idx, :m_c],
+            owners=packed.owners[idx],
+        ))
+        ranks.append(idx)
+    return BucketedPrediction(buckets=buckets, ranks=ranks)

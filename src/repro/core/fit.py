@@ -53,8 +53,15 @@ def fit_sbv(
     backend: str = "ref",
     verbose: bool = False,
     distributed=None,   # optional (mesh, axis) for shard_map likelihood
+    n_buckets: int | None = None,
 ) -> FitResult:
-    """Maximum-likelihood fit of (sigma^2, beta, nugget) with fixed nu."""
+    """Maximum-likelihood fit of (sigma^2, beta, nugget) with fixed nu.
+
+    ``n_buckets`` runs the likelihood on the bucketed layout
+    (docs/packing.md). Each Scaled-Vecchia structure refresh re-clusters
+    with the current beta, which reshapes the block-size distribution —
+    so the packing is RE-bucketed every outer round, keeping bucket
+    ceilings matched to the refreshed skew."""
     d = x.shape[1]
     params = init or KernelParams.create(sigma2=float(np.var(y)), beta=0.5, nugget=1e-3, d=d)
     history = []
@@ -63,6 +70,10 @@ def fit_sbv(
     for outer in range(outer_rounds):
         beta_np = np.asarray(params.beta)
         packed, _ = preprocess(x, y, beta_np, cfg)
+        if n_buckets:
+            from .buckets import bucket_blocks
+
+            packed = bucket_blocks(packed, n_buckets=n_buckets)
         if distributed is not None:
             from .distributed import distributed_neg_loglik_fn
 

@@ -29,6 +29,34 @@ def round_up(n: int, mult: int) -> int:
     return ((n + mult - 1) // mult) * mult
 
 
+def _check_neighbors(nb: np.ndarray, b: int, n_source: int) -> np.ndarray:
+    """Validate one block's neighbor index list before it is gathered.
+
+    A fixed-width neighbor array padded with sentinels (-1, or repeats of
+    the last index) would pass silently through ``x[nb]`` — negative
+    indices wrap around in numpy — and be packed as REAL rows with
+    ``nn_mask=True``, corrupting the likelihood with no error anywhere
+    downstream. Packing therefore only accepts true (unpadded) index
+    lists: under-full blocks must arrive SHORT, and the packer masks the
+    tail itself."""
+    nb = np.asarray(nb)
+    if nb.ndim != 1:
+        raise ValueError(f"block {b}: neighbor list must be 1-D, got shape {nb.shape}")
+    if nb.size and (int(nb.min()) < 0 or int(nb.max()) >= n_source):
+        raise ValueError(
+            f"block {b}: neighbor indices outside [0, {n_source}) — pass true "
+            "(unpadded) neighbor lists; sentinel padding would be gathered as "
+            "real rows and masked True"
+        )
+    if np.unique(nb).size != nb.size:
+        raise ValueError(
+            f"block {b}: duplicate neighbor indices — repeat-of-last-index "
+            "padding would gather duplicate conditioning rows (near-singular "
+            "covariance); true kNN lists never repeat"
+        )
+    return nb
+
+
 def tile_predict_shapes(
     bs: int, m: int, bs_mult: int = TILE_SUBLANE, m_mult: int = TILE_LANE
 ) -> tuple[int, int]:
@@ -194,7 +222,7 @@ def pack_prediction(
         q_x[b, : mb.size] = x_test[mb]
         q_mask[b, : mb.size] = True
         q_idx[b, : mb.size] = mb
-        nb = neighbors[b][:m_pred]
+        nb = _check_neighbors(neighbors[b], b, x_train.shape[0])[:m_pred]
         nn_x[b, : nb.size] = x_train[nb]
         nn_y[b, : nb.size] = y_train[nb]
         nn_mask[b, : nb.size] = True
@@ -233,7 +261,7 @@ def pack_blocks(
         blk_x[rank, : mb.size] = x_raw[mb]
         blk_y[rank, : mb.size] = y[mb]
         blk_mask[rank, : mb.size] = True
-        nb = neighbors[b][:m]
+        nb = _check_neighbors(neighbors[b], b, x_raw.shape[0])[:m]
         nn_x[rank, : nb.size] = x_raw[nb]
         nn_y[rank, : nb.size] = y[nb]
         nn_mask[rank, : nb.size] = True

@@ -184,7 +184,15 @@ def batched_block_predict(
 
     Backends: ``ref`` (vmapped jnp, differentiable), ``pallas`` (fused
     kernel on the given shapes), ``pallas_tiled`` (fused kernel on
-    8x128-aligned tiles — the compiled f32 TPU serving path)."""
+    8x128-aligned tiles — the compiled f32 TPU serving path), ``auto``
+    (resolved per batch shape by ``kernels.ops.select_backend`` — the
+    bucketed execution layer uses this to mix backends across buckets)."""
+    if backend == "auto":
+        from repro.kernels import ops as kops
+
+        backend = kops.select_backend(
+            q_x.shape[1], nn_x.shape[1], kind="predict", dtype=q_x.dtype
+        )
     if backend == "ref":
         return jax.vmap(
             lambda a, b, c, d, e: _predict_one(params, nu, a, b, c, d, e)
@@ -243,6 +251,7 @@ def predict_sbv(
     backend: str = "ref",
     chunk_size: int | None = None,
     dtype=np.float64,
+    n_buckets: int | None = None,
 ) -> Prediction:
     """Packed block prediction over the full test set.
 
@@ -250,7 +259,10 @@ def predict_sbv(
     (paper Fig. 4 isolates structure quality: BV = isotropic structure +
     true kernel; SBV = scaled structure + true kernel). ``chunk_size``
     streams the test set through fixed-shape device programs so memory
-    stays bounded for arbitrary n_test."""
+    stays bounded for arbitrary n_test. ``n_buckets`` executes each chunk
+    as size-buckets padded to their own ceilings (docs/packing.md) instead
+    of one uniformly-padded batch; mean/var are unchanged (<=1e-10), only
+    padding waste drops."""
     beta = np.asarray(params.beta if beta_struct is None else beta_struct)
     x_test = np.asarray(x_test, dtype=np.float64)
     n_test = x_test.shape[0]
@@ -266,13 +278,26 @@ def predict_sbv(
         index, x_test, bs_pred, m_pred, alpha=alpha, seed=seed,
         n_workers=n_workers, chunk_size=chunk_size, dtype=dtype,
     ):
-        mu_b, var_b, sm_b, ss_b = _predict_and_simulate(
-            params, *(jnp.asarray(a) for a in packed.arrays()),
-            jax.random.fold_in(key, ci),
-            nu=nu, backend=backend, n_sims=n_sims,
-        )
-        scatter_packed(packed, (mu_b, mean), (var_b, var),
-                       (sm_b, sim_mean), (ss_b, sim_std))
+        if n_buckets:
+            from .buckets import bucket_mults, bucket_prediction
+
+            bs_mult, m_mult = bucket_mults(backend)
+            pieces = bucket_prediction(
+                packed, n_buckets=n_buckets, bs_mult=bs_mult, m_mult=m_mult,
+            ).buckets
+        else:
+            pieces = [packed]
+        key_c = jax.random.fold_in(key, ci)
+        for bi, piece in enumerate(pieces):
+            # Uniform path keeps the pre-bucketing key stream (bit-stable
+            # sim draws); buckets get independent per-bucket streams.
+            mu_b, var_b, sm_b, ss_b = _predict_and_simulate(
+                params, *(jnp.asarray(a) for a in piece.arrays()),
+                key_c if not n_buckets else jax.random.fold_in(key_c, bi),
+                nu=nu, backend=backend, n_sims=n_sims,
+            )
+            scatter_packed(piece, (mu_b, mean), (var_b, var),
+                           (sm_b, sim_mean), (ss_b, sim_std))
 
     z975 = 1.959963984540054
     return Prediction(

@@ -139,11 +139,28 @@ def batched_block_loglik(
 
 
 def packed_loglik(params: KernelParams, packed, nu: float = 3.5, backend: str = "ref") -> jax.Array:
-    """Log-likelihood of a PackedBlocks dataset.
+    """Log-likelihood of a PackedBlocks OR BucketedBlocks dataset.
 
     backend='ref' uses this module's vmapped jnp path; backend='pallas'
-    dispatches to the fused TPU kernel (interpret mode on CPU).
+    dispatches to the fused TPU kernel (interpret mode on CPU);
+    backend='auto' picks per batch shape (``kernels.ops.select_backend``).
+
+    A ``BucketedBlocks`` input loops its per-shape buckets through the
+    same batched program — one compile per bucket shape, cached by jit —
+    and sums the bucket logliks. Identity padding makes the result equal
+    to the uniform single-bucket layout (pinned to 1e-10 in
+    tests/test_buckets.py).
     """
+    from .buckets import BucketedBlocks
+
+    if isinstance(packed, BucketedBlocks):
+        return bucketed_loglik(params, packed, nu=nu, backend=backend)
+    if backend == "auto":
+        from repro.kernels import ops as kops
+
+        backend = kops.select_backend(
+            packed.bs_max, packed.m, kind="loglik", dtype=packed.blk_x.dtype
+        )
     if backend == "ref":
         return batched_block_loglik(
             params,
@@ -161,3 +178,19 @@ def packed_loglik(params: KernelParams, packed, nu: float = 3.5, backend: str = 
             nu=nu,
         )
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def bucketed_loglik(params: KernelParams, bucketed, nu: float = 3.5,
+                    backend: str = "ref") -> jax.Array:
+    """Sum of per-bucket packed logliks (variable-size batched execution).
+
+    Each bucket is a ``PackedBlocks`` padded only to its own ceiling, so
+    the device does Sigma true work + per-bucket slack instead of padding
+    every block to the global maximum. Differentiable: gradients flow
+    through each bucket's program independently."""
+    lls = [packed_loglik(params, pk, nu=nu, backend=backend)
+           for pk in bucketed.buckets]
+    total = lls[0]
+    for ll in lls[1:]:
+        total = total + ll
+    return total

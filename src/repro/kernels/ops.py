@@ -67,6 +67,26 @@ def _bwd(nu, res, g):
 sbv_loglik.defvjp(_fwd, _bwd)
 
 
+def select_backend(bs: int, m: int, kind: str = "predict", dtype=None) -> str:
+    """Resolve ``backend='auto'`` to a concrete kernel per batch shape.
+
+    The bucketed execution layer calls this once per bucket, so one packed
+    dataset can mix backends: big tile-aligned f32 buckets take the
+    compiled ``pallas_tiled`` path, mid-size buckets the fused ``pallas``
+    kernel, and small ragged buckets the vmapped ``ref`` program (where
+    kernel launch overhead would dominate). ``kind`` is ``'predict'`` or
+    ``'loglik'`` (the loglik kernel has no tiled variant).
+    """
+    import numpy as _np
+
+    f32 = dtype is not None and _np.dtype(dtype) == _np.float32
+    if kind == "predict" and f32 and bs % 8 == 0 and m % 128 == 0:
+        return "pallas_tiled"
+    if bs * m >= 2048:
+        return "pallas"
+    return "ref"
+
+
 def sbv_predict(params: KernelParams, q_x, q_mask, nn_x, nn_y, nn_mask, nu=3.5,
                 tiled: bool = False):
     """Batched block conditional mean/variance via the fused Pallas kernel.

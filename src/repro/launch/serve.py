@@ -69,6 +69,15 @@ def serve_gp(argv=None):
                     help="micro-batch dispatch threshold (default: --chunk)")
     ap.add_argument("--max-wait-ms", type=float, default=10.0,
                     help="max batching delay after the first queued request")
+    ap.add_argument("--adaptive-wait", action="store_true",
+                    help="scale the batching window within [0, max-wait-ms] "
+                         "from the observed request inter-arrival EMA")
+    ap.add_argument("--buckets", type=int, default=None,
+                    help="bucket each chunk by size with this many geometric "
+                         "ceiling levels per dimension (realized buckets = "
+                         "occupied (bs, m) cells, each padded to its own "
+                         "ceiling; docs/packing.md); reports padding "
+                         "occupancy")
     ap.add_argument("--pipeline", default="double", choices=["double", "sync"],
                     help="double = overlap host packing with device compute")
     ap.add_argument("--compare", action="store_true",
@@ -106,11 +115,13 @@ def serve_gp(argv=None):
     pipe_cfg = PipelineConfig(
         bs_pred=args.bs_pred, m_pred=args.m_pred, backend=args.backend,
         dtype=dtype, chunk_size=args.chunk, n_workers=args.workers,
+        n_buckets=args.buckets,
     )
     cfg = GPServerConfig(
         pipeline=pipe_cfg,
         policy=BatchingPolicy(max_points=args.max_points or args.chunk,
-                              max_wait_s=args.max_wait_ms / 1e3),
+                              max_wait_s=args.max_wait_ms / 1e3,
+                              adaptive=args.adaptive_wait),
         pipelined=args.pipeline == "double",
         seed=args.seed,
     )
@@ -142,7 +153,8 @@ def serve_gp(argv=None):
           f"occupancy={stats['mean_batch_points']:.0f} pts/batch "
           f"latency p50={stats['latency_p50_s']*1e3:.1f}ms "
           f"p95={stats['latency_p95_s']*1e3:.1f}ms "
-          f"compiled-shapes={stats['n_compiled_shapes']}")
+          f"compiled-shapes={stats['n_compiled_shapes']} "
+          f"padding-occupancy={stats['padding_occupancy']:.3f}")
     assert np.all(np.isfinite(mean)) and np.all(var > 0)
 
     if args.compare:

@@ -31,11 +31,22 @@ from .telemetry import RequestTrace, now
 
 @dataclass
 class BatchingPolicy:
-    """Dispatch thresholds for the micro-batcher."""
+    """Dispatch thresholds for the micro-batcher.
+
+    With ``adaptive=True`` the wait window scales with observed traffic:
+    the batcher tracks an EMA of request inter-arrival times and waits
+    ``window_factor * ema`` (clamped to ``[0, max_wait_s]``) — under
+    heavy traffic the window stays wide enough to coalesce the next few
+    arrivals, while sparse traffic (expected gap beyond the cap) stops
+    paying the full ``max_wait_s`` latency tax for a coalescing partner
+    that is not coming."""
 
     max_points: int = 4096     # dispatch once this many points are queued
     max_wait_s: float = 0.010  # ... or this long after the first request
     max_requests: int = 1024   # hard cap on requests per batch
+    adaptive: bool = False     # scale the wait window from arrival rate
+    window_factor: float = 4.0 # target ~this many further arrivals/window
+    ema_alpha: float = 0.2     # EMA weight of the newest inter-arrival gap
 
 
 @dataclass
@@ -46,6 +57,7 @@ class PredictRequest:
     x: np.ndarray
     future: Future
     trace: RequestTrace = field(init=False)
+    t_arrival: float = field(init=False, default=0.0)  # batcher-clock stamp
 
     def __post_init__(self):
         self.trace = RequestTrace(n_points=self.x.shape[0])
@@ -62,15 +74,42 @@ class MicroBatcher:
 
     _FLUSH = object()
 
-    def __init__(self, policy: BatchingPolicy):
+    def __init__(self, policy: BatchingPolicy, clock=now):
         self.policy = policy
         self._q: queue.Queue = queue.Queue()
         self._closed = threading.Event()
+        self._clock = clock            # injectable for deterministic tests
+        self._arrival_lock = threading.Lock()
+        self._last_arrival: float | None = None
+        self._ema_gap_s: float | None = None
 
     def put(self, req: PredictRequest) -> None:
         if self._closed.is_set():
             raise RuntimeError("server is stopped")
+        req.t_arrival = self._observe_arrival()
         self._q.put(req)
+
+    def _observe_arrival(self) -> float:
+        t = self._clock()
+        with self._arrival_lock:
+            if self._last_arrival is not None:
+                gap = max(t - self._last_arrival, 0.0)
+                a = self.policy.ema_alpha
+                self._ema_gap_s = (
+                    gap if self._ema_gap_s is None
+                    else (1.0 - a) * self._ema_gap_s + a * gap
+                )
+            self._last_arrival = t
+        return t
+
+    def effective_wait_s(self) -> float:
+        """The batching window currently in force (see BatchingPolicy)."""
+        pol = self.policy
+        with self._arrival_lock:
+            ema = self._ema_gap_s
+        if not pol.adaptive or ema is None:
+            return pol.max_wait_s
+        return min(pol.max_wait_s, max(0.0, pol.window_factor * ema))
 
     def flush(self) -> None:
         """Force the dispatcher to emit whatever is queued right now."""
@@ -121,14 +160,17 @@ class MicroBatcher:
             return batch
         batch.append(first)
         points += first.x.shape[0]
-        deadline = first.trace.t_submit + pol.max_wait_s
+        # Deadline math runs entirely on the batcher's clock (t_arrival is
+        # stamped by put() with the same clock), so the adaptive window is
+        # deterministically testable with a fake clock.
+        deadline = first.t_arrival + self.effective_wait_s()
 
         while (points < pol.max_points and len(batch) < pol.max_requests
                and not self._closed.is_set()):
             try:
                 nxt = self._q.get_nowait()   # drain backlog unconditionally
             except queue.Empty:
-                remaining = deadline - now()
+                remaining = deadline - self._clock()
                 if remaining <= 0:
                     break
                 try:

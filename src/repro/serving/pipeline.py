@@ -45,34 +45,82 @@ class PipelineConfig:
     m_pred: int = 120
     nu: float = 3.5
     alpha: float = 100.0
-    backend: str = "ref"      # 'ref' | 'pallas' | 'pallas_tiled'
+    backend: str = "ref"      # 'ref' | 'pallas' | 'pallas_tiled' | 'auto'
     dtype: type = np.float64  # float32 for the compiled TPU kernel
     chunk_size: int | None = 4096
     n_workers: int = 1
     prefetch: int = 2         # packed chunks in flight (2 = double buffer)
+    n_buckets: int | None = None  # size-bucketed micro-batches (docs/packing.md)
+
+
+def make_chunk_split(cfg: PipelineConfig):
+    """Return ``split(packed) -> [packed_piece, ...]`` — the host-side
+    bucketing step of one chunk (the uniform layout is the one-piece
+    special case). Pure numpy: the pipelined driver runs it on the
+    PRODUCER thread so the slice copies overlap device compute like the
+    rest of packing."""
+    if not cfg.n_buckets:
+        return lambda packed: [packed]
+
+    from repro.core.buckets import bucket_mults, bucket_prediction
+    from repro.core.packing import round_up
+
+    # Serving quantizes bucket shapes harder than the one-shot path:
+    # ceilings to multiples of 8 and block counts padded to multiples
+    # of 8 (masked dummies, inert), so steady-state traffic converges
+    # to a bounded set of compile-cache keys just like the uniform
+    # `pad_shapes` protocol.
+    bs_mult, m_mult = (max(v, 8) for v in bucket_mults(cfg.backend))
+
+    def split(packed):
+        pieces = bucket_prediction(packed, n_buckets=cfg.n_buckets,
+                                   bs_mult=bs_mult, m_mult=m_mult).buckets
+        return [p.pad_to_blocks(round_up(p.n_blocks, 8)) for p in pieces]
+
+    return split
 
 
 def make_chunk_compute(params: KernelParams, cfg: PipelineConfig, mesh=None,
                        axis: str = "workers"):
-    """Return ``compute(packed) -> (packed, mu, var)``.
-
-    With a mesh, blocks are sharded by owner first (which reorders them —
-    hence the packed result is returned alongside the outputs so the
-    scatter uses matching indices)."""
+    """Return ``compute(pieces) -> [(packed_piece, mu, var), ...]`` over
+    the (already split) pieces of one chunk; every piece is dispatched
+    asynchronously through the jitted predict program. With a mesh, each
+    piece's blocks are sharded by owner first (which reorders them —
+    hence every piece is returned alongside its outputs so the scatter
+    uses matching indices)."""
     if mesh is None:
-        def compute(packed):
-            mu, var = packed_predict(params, packed, nu=cfg.nu,
-                                     backend=cfg.backend)
-            return packed, mu, var
+        def compute(pieces):
+            out = []
+            for piece in pieces:
+                mu, var = packed_predict(params, piece, nu=cfg.nu,
+                                         backend=cfg.backend)
+                out.append((piece, mu, var))
+            return out
         return compute
 
     from repro.core.distributed import sharded_packed_predict
 
-    def compute(packed):
-        return sharded_packed_predict(params, packed, mesh, axis=axis,
-                                      nu=cfg.nu, backend=cfg.backend)
+    def compute(pieces):
+        return [
+            sharded_packed_predict(params, piece, mesh, axis=axis,
+                                   nu=cfg.nu, backend=cfg.backend)
+            for piece in pieces
+        ]
 
     return compute
+
+
+def _record_pieces(stats: ServerStats | None, pieces) -> None:
+    """Per-piece shape + padding-occupancy telemetry for ONE chunk (the
+    chunk counter advances once however many bucket pieces it split into)."""
+    if stats is None:
+        return
+    from repro.core.buckets import prediction_work
+
+    for i, (piece, _, _) in enumerate(pieces):
+        stats.record_chunk_shape(piece.n_blocks, piece.bs_pred, piece.m_pred,
+                                 count_chunk=i == 0)
+    stats.record_occupancy(*prediction_work([p for p, _, _ in pieces]))
 
 
 def _chunks(index: TrainIndex, x_test: np.ndarray, cfg: PipelineConfig,
@@ -98,13 +146,13 @@ def predict_synchronous(
     n_test = int(np.asarray(x_test).shape[0])
     mean = np.zeros(n_test)
     var = np.zeros(n_test)
+    split = make_chunk_split(cfg)
     compute = make_chunk_compute(params, cfg, mesh)
     for _, packed in _chunks(index, x_test, cfg, seed):
-        packed, mu, vr = compute(packed)
-        if stats is not None:
-            stats.record_chunk_shape(packed.n_blocks, packed.bs_pred,
-                                     packed.m_pred)
-        scatter_packed(packed, (mu, mean), (vr, var))  # forces the result
+        pieces = compute(split(packed))
+        _record_pieces(stats, pieces)
+        for piece, mu, vr in pieces:
+            scatter_packed(piece, (mu, mean), (vr, var))  # forces the result
     return mean, var
 
 
@@ -128,6 +176,7 @@ def predict_pipelined(
     if n_test == 0:
         return mean, var
 
+    split = make_chunk_split(cfg)
     compute = make_chunk_compute(params, cfg, mesh)
     q: queue.Queue = queue.Queue(maxsize=max(1, cfg.prefetch))
     stop = threading.Event()  # consumer died early — unblock the producer
@@ -145,7 +194,9 @@ def predict_pipelined(
     def producer():
         try:
             for _, packed in _chunks(index, x_test, cfg, seed):
-                if not put_or_stop(packed):
+                # bucket split is host numpy — keep it off the consumer's
+                # critical path, same as the rest of packing
+                if not put_or_stop(split(packed)):
                     return
             put_or_stop(_DONE)
         except BaseException as exc:  # surface packing errors to the consumer
@@ -154,7 +205,7 @@ def predict_pipelined(
     th = threading.Thread(target=producer, name="sbv-packer", daemon=True)
     th.start()
 
-    inflight = None  # (packed, mu_device, var_device) — dispatched, not forced
+    inflight = None  # [(piece, mu_dev, var_dev), ...] — dispatched, not forced
     try:
         while True:
             item = q.get()
@@ -162,17 +213,15 @@ def predict_pipelined(
                 break
             if isinstance(item, BaseException):
                 raise item
-            packed, mu, vr = compute(item)   # async dispatch, returns early
-            if stats is not None:
-                stats.record_chunk_shape(packed.n_blocks, packed.bs_pred,
-                                         packed.m_pred)
+            pieces = compute(item)   # async dispatch, returns early
+            _record_pieces(stats, pieces)
             if inflight is not None:
-                p_prev, mu_prev, vr_prev = inflight
-                scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
-            inflight = (packed, mu, vr)
+                for p_prev, mu_prev, vr_prev in inflight:
+                    scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
+            inflight = pieces
         if inflight is not None:
-            p_prev, mu_prev, vr_prev = inflight
-            scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
+            for p_prev, mu_prev, vr_prev in inflight:
+                scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
     finally:
         stop.set()
         th.join(timeout=10.0)

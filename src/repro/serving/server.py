@@ -18,6 +18,12 @@ Shape stability: chunked packing rounds (bc, bs) to multiples of 8 and
 the ``pallas_tiled`` backend rounds (bs, m) to the native 8x128 f32 tile
 inside the jit, so steady-state traffic hits a handful of compile-cache
 keys no matter how request sizes vary (``stats()['n_compiled_shapes']``).
+
+Bucketed micro-batches: with ``PipelineConfig(n_buckets=K)`` each chunk
+executes as size-buckets padded only to their own ceilings
+(docs/packing.md) instead of one uniformly-padded batch; the padding
+waste saved is reported as ``stats()['padding_occupancy']`` (true FLOPs
+over padded FLOPs — 1.0 means no waste).
 """
 from __future__ import annotations
 

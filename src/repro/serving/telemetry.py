@@ -61,6 +61,8 @@ class ServerStats:
         self.latencies_s: deque[float] = deque(maxlen=window)
         self.queue_waits_s: deque[float] = deque(maxlen=window)
         self.compiled_shapes: set[tuple] = set()  # (bc, bs, m) seen by jit
+        self.true_flops = 0.0    # padding-occupancy accounting: useful work
+        self.padded_flops = 0.0  # ... vs what the padded shapes execute
         self.t_start = now()
 
     def record_batch(self, n_requests: int, n_points: int) -> None:
@@ -69,10 +71,22 @@ class ServerStats:
             self.batch_sizes.append(n_requests)
             self.batch_points.append(n_points)
 
-    def record_chunk_shape(self, bc: int, bs: int, m: int) -> None:
+    def record_chunk_shape(self, bc: int, bs: int, m: int,
+                           count_chunk: bool = True) -> None:
+        """Track one device-program shape; ``count_chunk=False`` records a
+        further bucket piece of an already-counted chunk, so ``n_chunks``
+        keeps meaning chunks processed, not pieces dispatched."""
         with self._lock:
-            self.n_chunks += 1
+            self.n_chunks += 1 if count_chunk else 0
             self.compiled_shapes.add((bc, bs, m))
+
+    def record_occupancy(self, true_flops: float, padded_flops: float) -> None:
+        """Accumulate the padding-occupancy ratio's numerator/denominator
+        (occupancy = Sigma true FLOPs / Sigma padded FLOPs; 1.0 = zero
+        padding waste — the bucketed layout's whole point)."""
+        with self._lock:
+            self.true_flops += float(true_flops)
+            self.padded_flops += float(padded_flops)
 
     def record_request(self, trace: RequestTrace) -> None:
         with self._lock:
@@ -104,4 +118,8 @@ class ServerStats:
                 "latency_p95_s": _percentile(lat, 0.95),
                 "queue_wait_p50_s": _percentile(waits, 0.50),
                 "n_compiled_shapes": len(self.compiled_shapes),
+                "padding_occupancy": (
+                    self.true_flops / self.padded_flops
+                    if self.padded_flops else 1.0
+                ),
             }

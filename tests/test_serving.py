@@ -149,3 +149,107 @@ def test_latency_smoke_and_telemetry(problem):
     assert stats["n_requests"] == 2  # warmup + request
     assert stats["n_compiled_shapes"] >= 1
     assert stats["latency_p95_s"] > 0
+
+
+def test_adaptive_window_scales_with_interarrival_ema():
+    """Deterministic fake-clock check of the adaptive batching window:
+    dense arrivals shrink the wait toward window_factor * EMA; sparse
+    arrivals clamp it back at max_wait_s; adaptive=False is inert."""
+    from concurrent.futures import Future
+
+    from repro.serving.batching import MicroBatcher, PredictRequest
+
+    t = [0.0]
+    clock = lambda: t[0]
+    mk = lambda: PredictRequest(x=np.zeros((1, 2)), future=Future())
+
+    pol = BatchingPolicy(max_wait_s=0.010, adaptive=True,
+                         window_factor=4.0, ema_alpha=0.5)
+    b = MicroBatcher(pol, clock=clock)
+    # no observations yet -> full window
+    assert b.effective_wait_s() == pytest.approx(0.010)
+    b.put(mk())  # first arrival: still no gap sample
+    assert b.effective_wait_s() == pytest.approx(0.010)
+
+    # dense traffic: 1ms gaps -> EMA=1ms -> window = 4ms < max_wait
+    for _ in range(6):
+        t[0] += 0.001
+        b.put(mk())
+    assert b.effective_wait_s() == pytest.approx(0.004, rel=1e-6)
+
+    # one sparse gap (1s) with alpha=0.5 blows the EMA past the cap
+    t[0] += 1.0
+    b.put(mk())
+    assert b.effective_wait_s() == pytest.approx(0.010)
+
+    # exact EMA arithmetic: gaps 2ms then 4ms from a fresh batcher
+    b2 = MicroBatcher(pol, clock=clock)
+    b2.put(mk())
+    t[0] += 0.002
+    b2.put(mk())   # EMA = 2ms
+    t[0] += 0.004
+    b2.put(mk())   # EMA = 0.5*2 + 0.5*4 = 3ms -> window = min(10, 12) ms
+    assert b2.effective_wait_s() == pytest.approx(0.010)
+    assert b2._ema_gap_s == pytest.approx(0.003)
+
+    # adaptive off: window pinned at max_wait_s regardless of traffic
+    b3 = MicroBatcher(BatchingPolicy(max_wait_s=0.010, adaptive=False),
+                      clock=clock)
+    for _ in range(5):
+        t[0] += 0.0001
+        b3.put(mk())
+    assert b3.effective_wait_s() == pytest.approx(0.010)
+
+
+def test_adaptive_deadline_drives_next_batch():
+    """next_batch's deadline runs on the batcher's (injectable) clock:
+    once the fake clock passes t_arrival + effective_wait, the dispatcher
+    returns the partial batch immediately instead of sleeping out
+    max_wait_s in real time."""
+    import time
+    from concurrent.futures import Future
+
+    from repro.serving.batching import MicroBatcher, PredictRequest
+
+    t = [0.0]
+    b = MicroBatcher(
+        BatchingPolicy(max_points=10_000, max_wait_s=30.0, adaptive=True,
+                       window_factor=2.0, ema_alpha=1.0),
+        clock=lambda: t[0],
+    )
+    # Establish a 1ms-gap EMA -> window = 2ms (vs the 30s hard cap).
+    for _ in range(3):
+        b.put(PredictRequest(x=np.zeros((1, 2)), future=Future()))
+        t[0] += 0.001
+    assert b.effective_wait_s() == pytest.approx(0.002)
+    # Clock is now past every arrival's deadline: next_batch must drain
+    # the queue and return without waiting out the 30s cap in real time.
+    t[0] += 1.0
+    t0 = time.monotonic()
+    batch = b.next_batch()
+    assert len(batch) == 3
+    assert time.monotonic() - t0 < 5.0  # returned immediately, not in 30s
+
+
+def test_bucketed_serving_matches_uniform(problem):
+    """PipelineConfig(n_buckets=K): bucketed micro-batches reproduce the
+    uniform path to 1e-10 and report padding occupancy in (0, 1]."""
+    params, x, y, requests = problem
+    from repro.core.predict import build_train_index
+    from repro.serving.telemetry import ServerStats
+
+    index = build_train_index(x, y, np.asarray(params.beta), 32, seed=0)
+    xt = np.concatenate(requests, axis=0)
+    cfg_u = PipelineConfig(bs_pred=8, m_pred=32, chunk_size=64)
+    cfg_b = PipelineConfig(bs_pred=8, m_pred=32, chunk_size=64, n_buckets=4)
+    stats = ServerStats()
+    m_u, v_u = predict_synchronous(params, index, xt, cfg_u, seed=0)
+    m_b, v_b = predict_synchronous(params, index, xt, cfg_b, seed=0,
+                                   stats=stats)
+    np.testing.assert_allclose(m_b, m_u, atol=1e-10, rtol=0)
+    np.testing.assert_allclose(v_b, v_u, atol=1e-10, rtol=0)
+    # double-buffered bucketed == sync bucketed, bitwise
+    m_p, v_p = predict_pipelined(params, index, xt, cfg_b, seed=0)
+    assert np.array_equal(m_p, m_b) and np.array_equal(v_p, v_b)
+    occ = stats.summary()["padding_occupancy"]
+    assert 0.0 < occ <= 1.0
