@@ -1,0 +1,208 @@
+"""Benchmark-regression gate: fresh smoke runs vs committed baselines.
+
+CI re-runs the smoke benchmarks into a scratch directory
+(``REPRO_RESULTS_DIR``) and this script compares them against the JSONs
+committed under ``benchmarks/results/``:
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh /tmp/bench-fresh padding_occupancy serving_throughput
+
+Per-metric tolerances (see ``SPECS``):
+
+* ``time``   — wall-clock, compared after normalizing by the host
+  calibration score (``calib_s``, a fixed GEMM+Cholesky probe saved by
+  each benchmark) so a slower CI host doesn't read as a regression.
+  FAILS when the normalized time regresses more than the tolerance
+  (default 10%); WARNS on an improvement beyond the tolerance so the
+  committed baseline gets refreshed.
+* ``floor``  — higher-is-better quality metric (occupancy, speedup).
+  FAILS when it drops more than the tolerance; WARNS on improvement.
+* ``ceiling``— lower-is-better absolute metric (peak RSS). FAILS when it
+  grows more than the tolerance.
+* ``bound``  — hard absolute bound (parity errors). FAILS when exceeded,
+  baseline-independent.
+
+Exit code 1 on any failure. ``--write-baseline`` copies the fresh
+results over the committed baselines instead (the refresh workflow when
+a warned improvement is real). Documented in docs/streaming.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+from dataclasses import dataclass
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@dataclass
+class Metric:
+    path: str            # dotted path; rows[key=value] selects a list entry
+    kind: str            # 'time' | 'floor' | 'ceiling' | 'bound'
+    tol: float = 0.10    # relative tolerance (kind != 'bound')
+    bound: float = 0.0   # absolute bound (kind == 'bound')
+    warn_only: bool = False
+    gated_by: str | None = None  # top-level flag; falsy in fresh -> SKIP
+
+
+SPECS: dict[str, list[Metric]] = {
+    "padding_occupancy": [
+        Metric("rows[path=loglik/bucketed].time_s", "time", tol=0.10),
+        Metric("rows[path=predict/bucketed].time_s", "time", tol=0.10),
+        Metric("loglik_occupancy_bucketed", "floor", tol=0.02),
+        Metric("predict_occupancy_bucketed", "floor", tol=0.02),
+        # Speedups are time ratios of the same run — machine-independent
+        # but noisy on small smoke sizes, so they warn rather than fail.
+        Metric("loglik_speedup", "floor", tol=0.15, warn_only=True),
+        Metric("predict_speedup", "floor", tol=0.15, warn_only=True),
+    ],
+    "serving_throughput": [
+        Metric("rows[path=sync].time_s", "time", tol=0.10),
+        Metric("rows[path=double].time_s", "time", tol=0.10),
+        Metric("speedup_double_vs_sync", "floor", tol=0.15, warn_only=True),
+        Metric("parity_double_vs_sync", "bound", bound=0.0),
+        Metric("parity_vs_predict_sbv", "bound", bound=1e-5),
+    ],
+    "fig_streaming_scale": [
+        Metric("t_fit_s", "time", tol=0.10),
+        Metric("t_predict_s", "time", tol=0.10),
+        Metric("parity_fit", "bound", bound=1e-10),
+        Metric("parity_predict", "bound", bound=1e-10),
+        # The benchmark degrades to a warning where /proc is unreadable
+        # (rss_measured=false, peak null) — mirror that here as SKIP
+        # instead of misreporting a present-but-null metric as missing.
+        Metric("peak_rss_delta_mb", "ceiling", tol=0.20,
+               gated_by="rss_measured"),
+    ],
+}
+
+_ROW_RE = re.compile(r"^(\w+)\[(\w+)=(.+)\]$")
+
+
+def lookup(payload: dict, path: str):
+    """Resolve 'a.b' / 'rows[path=loglik/bucketed].time_s' style paths."""
+    cur = payload
+    for part in path.split("."):
+        m = _ROW_RE.match(part)
+        if m:
+            name, key, want = m.groups()
+            rows = cur.get(name, [])
+            cur = next((r for r in rows if str(r.get(key)) == want), None)
+        elif isinstance(cur, dict):
+            cur = cur.get(part)
+        else:
+            cur = None
+        if cur is None:
+            return None
+    return cur
+
+
+def check_benchmark(name: str, fresh: dict, base: dict) -> list[tuple]:
+    """Return (metric, status, detail) rows; status in OK/WARN/FAIL/SKIP."""
+    out = []
+    # Normalize wall times by each payload's own calibration score.
+    calib_f = fresh.get("calib_s")
+    calib_b = base.get("calib_s")
+    normalize = bool(calib_f and calib_b)
+    for spec in SPECS[name]:
+        v_f = lookup(fresh, spec.path)
+        if spec.gated_by and not fresh.get(spec.gated_by):
+            out.append((spec, "SKIP",
+                        f"{spec.gated_by} is false in the fresh run"))
+            continue
+        if spec.kind == "bound":
+            if v_f is None:
+                out.append((spec, "FAIL", "metric missing from fresh run"))
+            elif float(v_f) <= spec.bound:
+                out.append((spec, "OK", f"{v_f:.3g} <= {spec.bound:.3g}"))
+            else:
+                out.append((spec, "FAIL", f"{v_f:.3g} > bound {spec.bound:.3g}"))
+            continue
+        v_b = lookup(base, spec.path)
+        if v_f is None:
+            out.append((spec, "FAIL", "metric missing from fresh run"))
+            continue
+        if v_b is None:
+            out.append((spec, "SKIP", "no baseline yet (new metric)"))
+            continue
+        v_f, v_b = float(v_f), float(v_b)
+        if spec.kind == "time":
+            if normalize:
+                v_f, v_b = v_f / calib_f, v_b / calib_b
+            worse = v_f > v_b * (1.0 + spec.tol)
+            better = v_f < v_b * (1.0 - spec.tol)
+            unit = "x-calib" if normalize else "s"
+        elif spec.kind == "floor":
+            worse = v_f < v_b * (1.0 - spec.tol)
+            better = v_f > v_b * (1.0 + spec.tol)
+            unit = ""
+        elif spec.kind == "ceiling":
+            worse = v_f > v_b * (1.0 + spec.tol)
+            better = v_f < v_b * (1.0 - spec.tol)
+            unit = ""
+        else:
+            raise ValueError(spec.kind)
+        detail = f"base {v_b:.4g} -> fresh {v_f:.4g} {unit}".rstrip()
+        if worse:
+            out.append((spec, "WARN" if spec.warn_only else "FAIL", detail))
+        elif better:
+            out.append((spec, "WARN",
+                        detail + "  (improved: refresh the baseline)"))
+        else:
+            out.append((spec, "OK", detail))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser("check_regression")
+    ap.add_argument("names", nargs="+", choices=sorted(SPECS),
+                    help="benchmarks to check")
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the fresh <name>.json results")
+    ap.add_argument("--baseline", default=BASELINE_DIR,
+                    help="committed baseline directory")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy fresh results over the baselines instead "
+                         "of comparing (refresh workflow)")
+    args = ap.parse_args(argv)
+
+    failed = False
+    for name in args.names:
+        fresh_path = os.path.join(args.fresh, f"{name}.json")
+        base_path = os.path.join(args.baseline, f"{name}.json")
+        if args.write_baseline:
+            shutil.copyfile(fresh_path, base_path)
+            print(f"[check_regression] {name}: baseline refreshed from "
+                  f"{fresh_path}")
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"[check_regression] {name}: FAIL — fresh result "
+                  f"{fresh_path} missing (benchmark did not run?)")
+            failed = True
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        if not os.path.exists(base_path):
+            print(f"[check_regression] {name}: no committed baseline — "
+                  f"commit {base_path} to arm this gate")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        print(f"\n== {name} ==")
+        for spec, status, detail in check_benchmark(name, fresh, base):
+            print(f"  [{status:4s}] {spec.kind:7s} {spec.path}: {detail}")
+            failed |= status == "FAIL"
+    if failed:
+        print("\n[check_regression] REGRESSION — see FAIL lines above. If "
+              "intentional, refresh baselines with --write-baseline.")
+        return 1
+    print("\n[check_regression] all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

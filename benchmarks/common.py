@@ -13,7 +13,12 @@ import time
 
 import numpy as np
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+# REPRO_RESULTS_DIR reroutes benchmark output (CI writes fresh runs to a
+# scratch dir and compares them against the committed baselines here with
+# benchmarks/check_regression.py — see docs/streaming.md).
+RESULTS_DIR = os.environ.get(
+    "REPRO_RESULTS_DIR", os.path.join(os.path.dirname(__file__), "results")
+)
 
 
 def parser(name: str) -> argparse.ArgumentParser:
@@ -37,6 +42,27 @@ def save(name: str, payload: dict):
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"[{name}] results -> {path}")
+
+
+def calibrate(reps: int = 3) -> float:
+    """Seconds for a fixed dense float64 workload (GEMM + Cholesky).
+
+    Saved as ``calib_s`` alongside benchmark wall times so the regression
+    gate (benchmarks/check_regression.py) can compare NORMALIZED times —
+    ``time_s / calib_s`` — across hosts of different speeds. A 10%
+    tolerance on normalized time is meaningful even when the committed
+    baseline was recorded on different hardware."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((512, 512))
+    spd = a @ a.T + 512.0 * np.eye(512)
+    best = np.inf
+    np.linalg.cholesky(spd)  # warm BLAS/LAPACK
+    for _ in range(reps):
+        t0 = time.time()
+        b = a @ a.T
+        np.linalg.cholesky(b + 512.0 * np.eye(512))
+        best = min(best, time.time() - t0)
+    return float(best)
 
 
 class Timer:

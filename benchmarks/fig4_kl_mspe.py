@@ -11,7 +11,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import SBVConfig, kl_divergence, preprocess
-from repro.core.kernels_math import KernelParams
 from repro.core.predict import mspe, predict_sbv
 from repro.data.gp_sim import paper_synthetic
 

@@ -7,7 +7,6 @@ Smoke scale shrinks n and m proportionally but keeps the config GEOMETRY
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.fit import fit_sbv
 from repro.core.pipeline import SBVConfig

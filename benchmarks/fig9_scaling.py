@@ -46,7 +46,6 @@ def load_balance(n, bs, m, workers, seed):
 
 
 def hot_path_collectives(n, bs, m, workers, seed):
-    import jax
     from repro.analysis.hlo_cost import CostModel
     from repro.core.distributed import distributed_neg_loglik_fn
     from repro.launch.mesh import make_worker_mesh

@@ -1,0 +1,294 @@
+"""Out-of-core SBV at paper scale: 1M-point fit under a hard RSS ceiling.
+
+The paper's scale claims (50M-point emulation, 2.56B points across 512
+GPUs) rest on every stage streaming through bounded memory. This
+benchmark is the single-host version of that claim, and the CI gate that
+keeps it true:
+
+1. SYNTHESIZE  — an anisotropic RFF-GP dataset is generated chunk-by-
+   chunk straight into an ``ArrayStore`` (never materialized in RAM).
+2. PARITY      — at 200k points, the store-backed ``fit_sbv`` +
+   ``predict_sbv`` must match the in-core (RAM-resident arrays, same
+   streaming code path) results to 1e-10. The IO layer must be invisible.
+3. SCALE       — the full ``--scale smoke`` 1M-point store-backed fit +
+   predict runs with the process peak-RSS DELTA asserted below
+   ``2 x working_set``, where the working set is computed from the run's
+   own streaming state (chunk windows + packed chunk on host and device +
+   index arrays + NNS gather cache). The same model shows the in-core
+   footprint the streaming path avoids; the budget must sit strictly
+   below it, otherwise the assertion would be vacuous.
+
+Peak RSS is measured by a 5ms /proc/self/status poll scoped to the
+fit+predict region (baseline captured at region start), so data
+synthesis and the parity phase don't mask or inflate the fit's peak.
+
+Wall times are saved raw and normalized by ``common.calibrate()`` so the
+regression gate (benchmarks/check_regression.py) can compare runs across
+hosts. See docs/streaming.md.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import calibrate, parser, save, table
+
+MB = 1024 * 1024
+
+
+# -- /proc-based peak-RSS accounting --------------------------------------
+
+
+def _status_kb(field: str) -> int | None:
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith(field + ":"):
+                    return int(line.split()[1])
+    except OSError:
+        return None
+    return None
+
+
+class PeakRssSampler:
+    """Track peak VmRSS over a region by polling /proc/self/status.
+
+    VmHWM + clear_refs would be exact, but clear_refs is often denied in
+    containers; a 5ms poll reliably catches the sustained allocations a
+    working-set ceiling is about (chunk windows, packed arrays, device
+    buffers), everywhere /proc exists. ``peak_delta_bytes`` is peak minus
+    the baseline captured at ``start()``.
+    """
+
+    def __init__(self, interval_s: float = 0.005):
+        import threading
+
+        self._interval = interval_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self.baseline_kb = None
+        self.peak_kb = None
+
+    def _run(self):
+        while not self._stop.is_set():
+            kb = _status_kb("VmRSS")
+            if kb is not None and (self.peak_kb is None or kb > self.peak_kb):
+                self.peak_kb = kb
+            self._stop.wait(self._interval)
+
+    def start(self) -> "PeakRssSampler":
+        self.baseline_kb = _status_kb("VmRSS")
+        self.peak_kb = self.baseline_kb
+        if self.baseline_kb is not None:
+            self._thread.start()
+        return self
+
+    def stop(self) -> int | None:
+        """Peak-minus-baseline in bytes, or None if /proc is unreadable."""
+        self._stop.set()
+        if self.baseline_kb is None:
+            return None
+        self._thread.join(timeout=5.0)
+        kb = _status_kb("VmRSS")  # catch a final high-water at stop time
+        if kb is not None and kb > self.peak_kb:
+            self.peak_kb = kb
+        return max(self.peak_kb - self.baseline_kb, 0) * 1024
+
+
+# -- chunked synthetic generator ------------------------------------------
+
+
+def write_rff_store(path: str, n: int, d: int, seed: int,
+                    gen_rows: int = 16384, n_features: int = 512):
+    """Anisotropic RFF-GP draw written chunk-by-chunk into a store.
+
+    Same spectral construction as ``data.gp_sim.sample_gp_rff`` (Matern
+    nu=3.5 via the t-distributed frequency trick), but the feature
+    projection is applied per generation chunk, so RAM stays at
+    ``gen_rows x n_features`` no matter how large ``n`` is. The first
+    ``d//2`` dimensions are relevant (small beta), the rest nuisance.
+    """
+    rng = np.random.default_rng(seed)
+    nu, sigma2, nugget = 3.5, 1.0, 1e-3
+    beta = np.where(np.arange(d) < d // 2, 0.2, 2.0)
+    z = rng.standard_normal((n_features, d))
+    g = rng.gamma(shape=nu, scale=1.0 / nu, size=(n_features, 1))
+    omega = z / np.sqrt(g) / beta[None, :]
+    phase = rng.uniform(0.0, 2.0 * np.pi, size=n_features)
+    w = rng.standard_normal(n_features)
+
+    from repro.data.store import ArrayStore
+
+    with ArrayStore.create(path, d) as writer:
+        done = 0
+        while done < n:
+            k = min(n - done, gen_rows)
+            x = rng.uniform(size=(k, d))
+            y = np.sqrt(2.0 * sigma2 / n_features) * (
+                np.cos(x @ omega.T + phase[None, :]) @ w
+            )
+            y = y + np.sqrt(nugget) * rng.standard_normal(k)
+            writer.append(x, y)
+            done += k
+    return ArrayStore(path), beta
+
+
+# -- phases ----------------------------------------------------------------
+
+
+def parity_phase(workdir: str, n: int, seed: int, knobs: dict) -> dict:
+    """Store-backed vs in-core (same rows, same streaming protocol)."""
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+    from repro.core.predict import predict_sbv
+
+    store, _ = write_rff_store(os.path.join(workdir, f"parity{n}"), n,
+                               knobs["d"], seed)
+    x, y = store.read_all()
+    cfg = SBVConfig(n_blocks=max(1, n // knobs["rows_per_block"]),
+                    m=knobs["m"], alpha=knobs["alpha"], seed=seed)
+    fit_kw = dict(inner_steps=knobs["parity_steps"], outer_rounds=1,
+                  stream_chunk=knobs["stream_chunk"])
+    r_store = fit_sbv(store, None, cfg, **fit_kw)
+    r_incore = fit_sbv(x, y, cfg, **fit_kw)
+    d_fit = max(
+        abs(np.asarray(getattr(r_store.params, f)) -
+            np.asarray(getattr(r_incore.params, f))).max()
+        for f in ("log_sigma2", "log_beta", "log_nugget")
+    )
+
+    rng = np.random.default_rng(seed + 7)
+    x_test = rng.uniform(size=(4000, knobs["d"]))
+    pred_kw = dict(bs_pred=knobs["bs_pred"], m_pred=knobs["m_pred"],
+                   alpha=knobs["alpha"], n_sims=2, chunk_size=2048,
+                   stream_chunk=knobs["stream_chunk"], seed=seed)
+    p_store = predict_sbv(r_store.params, store, None, x_test, **pred_kw)
+    p_incore = predict_sbv(r_incore.params, x, y, x_test, **pred_kw)
+    d_pred = max(abs(p_store.mean - p_incore.mean).max(),
+                 abs(p_store.var - p_incore.var).max())
+    print(f"[fig_streaming_scale] parity@{n}: fit max|delta|={d_fit:.3e} "
+          f"predict max|delta|={d_pred:.3e}")
+    assert d_fit <= 1e-10, f"store vs in-core fit diverged: {d_fit}"
+    assert d_pred <= 1e-10, f"store vs in-core predict diverged: {d_pred}"
+    return {"parity_n": n, "parity_fit": float(d_fit),
+            "parity_predict": float(d_pred)}
+
+
+def scale_phase(workdir: str, n: int, seed: int, knobs: dict) -> dict:
+    """The RSS-bounded big run: store-backed fit + predict, measured."""
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+    from repro.core.predict import predict_sbv
+
+    d = knobs["d"]
+    store, _ = write_rff_store(os.path.join(workdir, f"scale{n}"), n, d, seed)
+    cfg = SBVConfig(n_blocks=max(1, n // knobs["rows_per_block"]),
+                    m=knobs["m"], alpha=knobs["alpha"], seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    x_test = rng.uniform(size=(knobs["n_test"], d))
+
+    sampler = PeakRssSampler().start()
+    t0 = time.time()
+    # Bucketed chunk dispatch (docs/packing.md): k-means skew makes the
+    # global bs_max ceiling waste most padded FLOPs at this scale.
+    res = fit_sbv(store, None, cfg, inner_steps=knobs["scale_steps"],
+                  outer_rounds=1, stream_chunk=knobs["stream_chunk"],
+                  n_buckets=4, verbose=True)
+    t_fit = time.time() - t0
+
+    t0 = time.time()
+    pred = predict_sbv(res.params, store, None, x_test,
+                       bs_pred=knobs["bs_pred"], m_pred=knobs["m_pred"],
+                       alpha=knobs["alpha"], n_sims=2, chunk_size=8192,
+                       stream_chunk=knobs["stream_chunk"], seed=seed)
+    t_pred = time.time() - t0
+    assert np.all(np.isfinite(pred.mean)) and np.all(pred.var > 0)
+    peak = sampler.stop()
+
+    # Working-set model from the run's OWN streaming state — shared with
+    # tests/test_streaming.py via data.streaming.working_set_model (see
+    # its docstring for the term-by-term breakdown).
+    from repro.data.streaming import working_set_model
+
+    st = res.stream_stats
+    ws = working_set_model(st, n, d, knobs["m"], knobs["stream_chunk"])
+    working_set = ws["total"]
+    budget = 2 * working_set
+    incore_bytes = ws["incore_total"]
+
+    out = {
+        "n": n, "d": d, "t_fit_s": t_fit, "t_predict_s": t_pred,
+        "n_chunks": st["n_chunks"], "bc": st["bc"], "bs_max": st["bs_max"],
+        "working_set_mb": working_set / MB, "rss_budget_mb": budget / MB,
+        "incore_estimate_mb": incore_bytes / MB,
+        "peak_rss_delta_mb": None if peak is None else peak / MB,
+        "rss_measured": peak is not None,
+    }
+    print(f"[fig_streaming_scale] scale@{n}: fit {t_fit:.1f}s "
+          f"predict {t_pred:.1f}s over {st['n_chunks']} chunks; "
+          f"budget {budget / MB:.0f}MB vs in-core {incore_bytes / MB:.0f}MB")
+    assert budget < incore_bytes, (
+        f"RSS budget {budget / MB:.0f}MB is not below the in-core footprint "
+        f"{incore_bytes / MB:.0f}MB — the ceiling would prove nothing"
+    )
+    if out["rss_measured"]:
+        print(f"[fig_streaming_scale] peak RSS delta {peak / MB:.0f}MB "
+              f"(ceiling {budget / MB:.0f}MB)")
+        assert peak <= budget, (
+            f"peak RSS {peak / MB:.0f}MB exceeded 2x working set "
+            f"{budget / MB:.0f}MB — streaming is leaking the dataset into RAM"
+        )
+    else:
+        print("[fig_streaming_scale] WARNING: VmHWM reset unavailable; "
+              "RSS ceiling not asserted on this platform")
+    return out
+
+
+def main(argv=None):
+    ap = parser("fig_streaming_scale")
+    ap.add_argument("--workdir", default=None,
+                    help="store directory (default: a temp dir, removed "
+                         "afterwards)")
+    ap.add_argument("--skip-parity", action="store_true",
+                    help="only run the RSS-bounded scale phase")
+    args = ap.parse_args(argv)
+
+    if args.scale == "smoke":
+        n_scale, n_parity = 1_000_000, 200_000
+        knobs = dict(d=4, rows_per_block=128, m=16, alpha=8.0,
+                     stream_chunk=131072, parity_steps=4, scale_steps=2,
+                     bs_pred=32, m_pred=32, n_test=8192)
+    else:  # paper: the 50M respiratory-scale run (hours; real hardware)
+        n_scale, n_parity = 50_000_000, 200_000
+        knobs = dict(d=8, rows_per_block=256, m=60, alpha=16.0,
+                     stream_chunk=524288, parity_steps=4, scale_steps=30,
+                     bs_pred=64, m_pred=120, n_test=100_000)
+
+    calib = calibrate()
+    workdir = args.workdir or tempfile.mkdtemp(prefix="sbv-streaming-")
+    payload = {"scale": args.scale, "seed": args.seed, "calib_s": calib}
+    try:
+        if not args.skip_parity:
+            payload.update(parity_phase(workdir, n_parity, args.seed, knobs))
+        payload.update(scale_phase(workdir, n_scale, args.seed, knobs))
+    finally:
+        if args.workdir is None:
+            shutil.rmtree(workdir, ignore_errors=True)
+
+    payload["t_fit_norm"] = payload["t_fit_s"] / calib
+    payload["t_predict_norm"] = payload["t_predict_s"] / calib
+    table([payload],
+          ["n", "t_fit_s", "t_predict_s", "peak_rss_delta_mb",
+           "rss_budget_mb", "incore_estimate_mb", "parity_fit",
+           "parity_predict"],
+          title="streaming scale")
+    save("fig_streaming_scale", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -154,8 +154,11 @@ def main(argv=None):
           f"{bucketed.occupancy():.3f}; speedup {t_u / t_b:.2f}x | predict "
           f"{occ_pu:.3f} -> {occ_pb:.3f}; speedup {tp_u / tp_b:.2f}x")
 
+    from benchmarks.common import calibrate
+
     save("padding_occupancy", {
-        "scale": args.scale, "n": int(x.shape[0]), "bc": int(packed.n_blocks),
+        "scale": args.scale, "calib_s": calibrate(),
+        "n": int(x.shape[0]), "bc": int(packed.n_blocks),
         "n_buckets": int(bucketed.n_buckets), "rows": rows,
         "loglik_occupancy_uniform": uniform.occupancy(),
         "loglik_occupancy_bucketed": bucketed.occupancy(),

@@ -133,8 +133,11 @@ def main():
           f"compiled-shapes={stats['n_compiled_shapes']} "
           f"padding-occupancy={stats['padding_occupancy']:.3f}")
 
+    from benchmarks.common import calibrate
+
     save("serving_throughput", {
-        "scale": args.scale, "backend": backend, "bucketed": args.bucketed,
+        "scale": args.scale, "calib_s": calibrate(),
+        "backend": backend, "bucketed": args.bucketed,
         "n_train": n_train, "n_test": n_test, "chunk": chunk,
         "bs_pred": bs, "m_pred": m, "n_requests": n_req,
         "t_index_s": t_index, "rows": rows, "speedup_double_vs_sync": speedup,

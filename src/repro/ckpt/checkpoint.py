@@ -25,7 +25,6 @@ import json
 import os
 import shutil
 import signal
-import tempfile
 import threading
 import time
 

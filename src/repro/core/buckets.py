@@ -199,6 +199,7 @@ def bucket_blocks(
     n_buckets: int = 4,
     bs_mult: int = 1,
     m_mult: int = 1,
+    ceilings: tuple[np.ndarray, np.ndarray] | None = None,
 ) -> BucketedBlocks:
     """Partition a uniformly-padded ``PackedBlocks`` into size-buckets.
 
@@ -207,11 +208,20 @@ def bucket_blocks(
     which skew keeps far below ``n_buckets**2`` in practice. ``bs_mult`` /
     ``m_mult`` align ceilings to hardware tiles (see
     ``packing.tile_predict_shapes``) so bucket shapes stay compile-cache
-    friendly."""
+    friendly.
+
+    ``ceilings=(bs_ceils, m_ceils)`` overrides the per-call ceiling
+    computation with precomputed GLOBAL levels — the streaming fit
+    buckets every spooled chunk against one ceiling set so the whole
+    round compiles at most one program per occupied cell instead of one
+    per (chunk, cell)."""
     bs_true = _true_sizes(packed.blk_mask)
     m_true = _true_sizes(packed.nn_mask)
-    bs_ceils = bucket_ceilings(bs_true, n_buckets, bs_mult)
-    m_ceils = bucket_ceilings(m_true, n_buckets, m_mult)
+    if ceilings is not None:
+        bs_ceils, m_ceils = ceilings
+    else:
+        bs_ceils = bucket_ceilings(bs_true, n_buckets, bs_mult)
+        m_ceils = bucket_ceilings(m_true, n_buckets, m_mult)
 
     buckets, ranks = [], []
     for bs_c, m_c, idx in _group(bs_true, m_true, bs_ceils, m_ceils):

@@ -12,6 +12,7 @@ cannot be differentiated through).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 import jax
@@ -30,6 +31,7 @@ class FitResult:
     params: KernelParams
     history: list = field(default_factory=list)  # (outer, inner, -loglik/n)
     packed: object = None
+    stream_stats: dict | None = None  # set by the streaming (out-of-core) path
 
 
 def neg_loglik_fn(packed, nu: float, backend: str):
@@ -41,10 +43,174 @@ def neg_loglik_fn(packed, nu: float, backend: str):
     return f
 
 
+_MAP_BATCH = 16  # blocks vmapped per lax.map step of the streaming grad
+
+
+def _chunk_grad_fn(nu: float, backend: str, n_points: int):
+    """jitted value_and_grad of one packed chunk's -loglik/n contribution.
+
+    All chunks of a structure round share one padded shape (see
+    ``_fit_sbv_streaming``), so this compiles once per round.
+
+    Device residency is the streaming fit's real memory ceiling: a
+    vmapped value_and_grad over the whole chunk materializes O(10)
+    buffers of (bc_chunk, bs+m, bs+m) during the backward pass — ~1GB at
+    a 32k-row chunk — so the 'ref' path runs the CHECKPOINTED
+    joint-assembly block likelihood under ``lax.map`` in ``_MAP_BATCH``-
+    block steps: residuals per step are just the block inputs, recompute
+    happens one mini-batch at a time, and the live set stays at a few
+    ``_MAP_BATCH x (bs+m)^2`` buffers however large the chunk is."""
+    from .vecchia import _block_loglik_joint_one
+
+    def f(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
+        if backend == "ref":
+            body = jax.checkpoint(
+                lambda a: _block_loglik_joint_one(params, nu, *a)
+            )
+            per_block = jax.lax.map(
+                body, (blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask),
+                batch_size=_MAP_BATCH,
+            )
+            ll = jnp.sum(per_block)
+        else:
+            from repro.kernels import ops as kops
+
+            ll = kops.sbv_loglik(params, blk_x, blk_y, blk_mask,
+                                 nn_x, nn_y, nn_mask, nu=nu)
+        return -ll / n_points
+
+    return jax.jit(jax.value_and_grad(f))
+
+
+def _fit_sbv_streaming(
+    store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
+    stream_chunk, n_buckets, spool_dir,
+):
+    """Out-of-core fit: every pass holds ~``stream_chunk`` data rows.
+
+    Per outer round: streaming structure (mini-batch k-means + store-backed
+    filtered NNS), then the rank-ordered blocks are packed into
+    ``stream_chunk``-row chunks (gather-and-remap from the store), padded
+    to ONE shared shape, and spooled to disk. Each inner step accumulates
+    value+grad over the spooled chunks — the likelihood is a sum over
+    blocks, so chunked accumulation differs from the monolithic in-core
+    program only in float summation order (pinned <= 1e-10 in
+    tests/test_streaming.py).
+    """
+    import shutil
+    import tempfile
+
+    from repro.data.streaming import (
+        pack_block_chunk, PackedChunkSpool, streaming_moments,
+        streaming_preprocess,
+    )
+
+    from .packing import round_up
+
+    if backend == "auto":
+        raise ValueError(
+            "backend='auto' resolves per packed shape; pass 'ref' or "
+            "'pallas' explicitly for the streaming fit"
+        )
+    n = store.n_rows
+    d = store.d
+    if init is None:
+        _, var_y = streaming_moments(store)
+        params = KernelParams.create(sigma2=var_y, beta=0.5, nugget=1e-3, d=d)
+    else:
+        params = init
+    history = []
+    stats = {"n_chunks": 0, "n_pieces": 0, "packed_chunk_bytes_max": 0,
+             "spool_bytes": 0, "bs_max": 0, "bc": 0}
+
+    for outer in range(outer_rounds):
+        beta_np = np.asarray(params.beta)
+        struct = streaming_preprocess(store, beta_np, cfg, stream_chunk)
+        bc_pad = max(len(r) for r in struct.plan)
+
+        if n_buckets:
+            # GLOBAL bucket ceilings + per-cell bc padding: every chunk's
+            # pieces land on one of <= occupied-cells shapes, so the
+            # round compiles a bounded program set (per-chunk ceilings
+            # would compile — and grow the XLA arena — per chunk).
+            from .buckets import _group, bucket_ceilings
+
+            bs_true = np.asarray(
+                [struct.blocks.members[b].size for b in struct.blocks.order])
+            m_true = np.asarray(
+                [min(len(struct.neigh[b]), cfg.m) for b in struct.blocks.order])
+            bs_ceils = bucket_ceilings(bs_true, n_buckets, 8)
+            m_ceils = bucket_ceilings(m_true, n_buckets, 8)
+            cell_bc: dict = {}
+            for ranks in struct.plan:
+                for bs_c, m_c, idx in _group(bs_true[ranks], m_true[ranks],
+                                             bs_ceils, m_ceils):
+                    # Same clamp bucket_blocks applies to piece shapes.
+                    key = (min(bs_c, struct.bs_max), min(m_c, cfg.m))
+                    cell_bc[key] = max(cell_bc.get(key, 0), round_up(idx.size, 8))
+
+        work_dir = spool_dir or tempfile.mkdtemp(prefix="sbv-spool-")
+        spool = PackedChunkSpool(os.path.join(work_dir, f"round{outer}"))
+        try:
+            for ranks in struct.plan:
+                packed = pack_block_chunk(
+                    store, struct.blocks, struct.neigh, ranks,
+                    m=cfg.m, bs_max=struct.bs_max, dtype=cfg.dtype,
+                )
+                if n_buckets:
+                    from .buckets import bucket_blocks
+
+                    bucketed = bucket_blocks(packed, ceilings=(bs_ceils, m_ceils))
+                    groups = _group(bs_true[ranks], m_true[ranks],
+                                    bs_ceils, m_ceils)
+                    pieces = [
+                        p.pad_to_blocks(cell_bc[(min(bs_c, packed.bs_max),
+                                                 min(m_c, packed.m))])
+                        for (bs_c, m_c, _), p in zip(groups, bucketed.buckets)
+                    ]
+                else:
+                    pieces = [packed.pad_to_blocks(bc_pad)]
+                for p in pieces:
+                    spool.add(p)
+            stats.update(
+                n_chunks=len(struct.plan), n_pieces=len(spool),
+                packed_chunk_bytes_max=max(stats["packed_chunk_bytes_max"],
+                                           spool.packed_bytes_max),
+                spool_bytes=max(stats["spool_bytes"], spool.packed_bytes_total),
+                bs_max=struct.bs_max, bc=struct.blocks.n_blocks,
+            )
+
+            grad_fn = _chunk_grad_fn(nu, backend, n)
+            state = adam_init(params)
+            for it in range(inner_steps):
+                loss = None
+                grad = None
+                for piece in spool:
+                    v, g = grad_fn(
+                        params,
+                        jnp.asarray(piece.blk_x), jnp.asarray(piece.blk_y),
+                        jnp.asarray(piece.blk_mask), jnp.asarray(piece.nn_x),
+                        jnp.asarray(piece.nn_y), jnp.asarray(piece.nn_mask),
+                    )
+                    loss = v if loss is None else loss + v
+                    grad = g if grad is None else jax.tree.map(jnp.add, grad, g)
+                params, state = adam_update(grad, state, params, lr)
+                history.append((outer, it, float(loss)))
+                if verbose and it % 10 == 0:
+                    print(f"[fit-stream] outer={outer} it={it} "
+                          f"nll/n={float(loss):.6f} pieces={len(spool)}")
+        finally:
+            spool.cleanup()
+            if spool_dir is None:
+                shutil.rmtree(work_dir, ignore_errors=True)
+    return FitResult(params=params, history=history, packed=None,
+                     stream_stats=stats)
+
+
 def fit_sbv(
     x: np.ndarray,
-    y: np.ndarray,
-    cfg: SBVConfig,
+    y: np.ndarray = None,
+    cfg: SBVConfig = None,
     init: KernelParams | None = None,
     nu: float = 3.5,
     lr: float = 0.05,
@@ -54,6 +220,8 @@ def fit_sbv(
     verbose: bool = False,
     distributed=None,   # optional (mesh, axis) for shard_map likelihood
     n_buckets: int | None = None,
+    stream_chunk: int | None = None,
+    spool_dir: str | None = None,
 ) -> FitResult:
     """Maximum-likelihood fit of (sigma^2, beta, nugget) with fixed nu.
 
@@ -61,7 +229,33 @@ def fit_sbv(
     (docs/packing.md). Each Scaled-Vecchia structure refresh re-clusters
     with the current beta, which reshapes the block-size distribution —
     so the packing is RE-bucketed every outer round, keeping bucket
-    ceilings matched to the refreshed skew."""
+    ceilings matched to the refreshed skew.
+
+    Out-of-core: pass ``x`` as a row store (``repro.data.ArrayStore`` /
+    ``MemoryStore``, with ``y=None``) and/or set ``stream_chunk`` to fit
+    through the streaming path (docs/streaming.md) — structure, packing
+    and likelihood all run in bounded ~``stream_chunk``-row passes. An
+    in-core ``(x, y)`` with ``stream_chunk`` set takes the identical code
+    path over a ``MemoryStore``, so store-backed and in-core streaming
+    fits agree bitwise on the same rows. In-core arrays WITHOUT
+    ``stream_chunk`` keep the original monolithic fast path."""
+    from repro.data.store import as_store, is_store
+
+    if cfg is None:
+        raise TypeError("fit_sbv requires an SBVConfig")
+    if is_store(x) or stream_chunk is not None:
+        if distributed is not None:
+            raise NotImplementedError(
+                "streaming + distributed likelihood is not wired yet; "
+                "fit in-core for multi-device runs (ROADMAP open item)"
+            )
+        from repro.data.streaming import DEFAULT_STRUCT_BATCH
+
+        store = as_store(x, y)
+        return _fit_sbv_streaming(
+            store, cfg, init, nu, lr, inner_steps, outer_rounds, backend,
+            verbose, stream_chunk or DEFAULT_STRUCT_BATCH, n_buckets, spool_dir,
+        )
     d = x.shape[1]
     params = init or KernelParams.create(sigma2=float(np.var(y)), beta=0.5, nugget=1e-3, d=d)
     history = []

@@ -50,7 +50,14 @@ def _scaled_domain_volume(x_scaled: np.ndarray) -> float:
 
 
 class _FlatBlocks:
-    """Block members flattened once for fast candidate slicing."""
+    """Block members flattened once for fast candidate slicing.
+
+    The streaming twin (``repro.data.streaming.LazyFlatBlocks``) keeps the
+    same index bookkeeping but serves member coordinates from the backing
+    store on demand instead of holding the full n x d gather — any code
+    that sticks to ``rows_of_blocks`` / ``points_of_blocks`` (as the NNS
+    loops below do) runs unchanged, and bounded, on either.
+    """
 
     def __init__(self, x_scaled: np.ndarray, blocks: BlockStructure):
         sizes = np.asarray([mb.size for mb in blocks.members], dtype=np.int64)
@@ -61,6 +68,8 @@ class _FlatBlocks:
         )
         self.flat_pts = x_scaled[self.flat_idx]
         self.flat_rank = np.repeat(blocks.rank_of_block, sizes)
+        self.n_rows = x_scaled.shape[0]
+        self.d = x_scaled.shape[1]
         # Block radius: max member distance to the block center.
         self.radii = np.array(
             [
@@ -76,14 +85,27 @@ class _FlatBlocks:
             [np.arange(self.starts[b], self.starts[b + 1]) for b in block_ids]
         )
 
+    def points_of_blocks(self, block_ids: np.ndarray) -> np.ndarray:
+        """Scaled member coordinates of the given blocks, concatenated in
+        block order (row-aligned with ``rows_of_blocks(block_ids)``)."""
+        if block_ids.size == 0:
+            return np.empty((0, self.d))
+        if block_ids.size == 1:
+            b = int(block_ids[0])
+            return self.flat_pts[self.starts[b]:self.starts[b + 1]]
+        return np.concatenate(
+            [self.flat_pts[self.starts[b]:self.starts[b + 1]] for b in block_ids]
+        )
+
 
 def filtered_nns(
-    x_scaled: np.ndarray,
+    x_scaled: np.ndarray | None,
     blocks: BlockStructure,
     m: int,
     alpha: float = 100.0,
     center_chunk: int = 2048,
     flat: _FlatBlocks | None = None,
+    domain_volume: float | None = None,
 ) -> list[np.ndarray]:
     """Exact preceding-block m-NNS per block via filtered candidate sets.
 
@@ -91,16 +113,20 @@ def filtered_nns(
     early-ordered blocks) sorted by distance to the center of block b.
     ``flat`` lets callers reuse a prebuilt ``_FlatBlocks`` of
     ``(x_scaled, blocks)`` — building one does a full n x d gather.
+    Streaming callers pass ``x_scaled=None`` with a store-backed ``flat``
+    plus a precomputed ``domain_volume`` (chunk-accumulated min/max extent
+    gives the same floats as the in-core formula).
     """
+    if flat is None:
+        flat = _FlatBlocks(x_scaled, blocks)
     bc = blocks.n_blocks
-    d = x_scaled.shape[1]
-    n = x_scaled.shape[0]
-    lam = nns_radius(n, m, d, _scaled_domain_volume(x_scaled), alpha)
+    n, d = flat.n_rows, flat.d
+    if domain_volume is None:
+        domain_volume = _scaled_domain_volume(x_scaled)
+    lam = nns_radius(n, m, d, domain_volume, alpha)
 
     centers = blocks.centers
     ranks = blocks.rank_of_block
-    if flat is None:
-        flat = _FlatBlocks(x_scaled, blocks)
     c2 = np.sum(centers * centers, axis=1)
     neigh: list[np.ndarray] = [np.empty(0, np.int64)] * bc
 
@@ -135,7 +161,7 @@ def _one_block(bi, center, dist_c, lam, m, ranks, flat) -> np.ndarray:
         covered = cand_blocks.size >= n_prec
         if cand_blocks.size:
             rows = flat.rows_of_blocks(cand_blocks)
-            d2p = np.sum((flat.flat_pts[rows] - center) ** 2, axis=1)
+            d2p = np.sum((flat.points_of_blocks(cand_blocks) - center) ** 2, axis=1)
             fine = d2p <= lam_try * lam_try
             n_fine = int(fine.sum())
             if n_fine >= m:
@@ -150,13 +176,14 @@ def _one_block(bi, center, dist_c, lam, m, ranks, flat) -> np.ndarray:
 
 
 def filtered_knn_points(
-    x_scaled: np.ndarray,
+    x_scaled: np.ndarray | None,
     blocks: BlockStructure,
     queries: np.ndarray,
     m: int,
     alpha: float = 100.0,
     center_chunk: int = 2048,
     flat: _FlatBlocks | None = None,
+    domain_volume: float | None = None,
 ) -> list[np.ndarray]:
     """Unconstrained k-NN of arbitrary query points against ALL training
     points, via the same coarse(block)/fine(point) filter. Used by the
@@ -164,12 +191,15 @@ def filtered_knn_points(
 
     ``flat`` lets chunked/persistent serving reuse one ``_FlatBlocks`` of
     the training set instead of re-flattening (a full n x d gather) per
-    query chunk."""
-    n, d = x_scaled.shape
-    nq = queries.shape[0]
-    lam = nns_radius(n, m, d, _scaled_domain_volume(x_scaled), alpha)
+    query chunk. Store-backed indexes pass ``x_scaled=None`` with a lazy
+    ``flat`` and a cached ``domain_volume`` (see ``TrainIndex``)."""
     if flat is None:
         flat = _FlatBlocks(x_scaled, blocks)
+    n, d = flat.n_rows, flat.d
+    nq = queries.shape[0]
+    if domain_volume is None:
+        domain_volume = _scaled_domain_volume(x_scaled)
+    lam = nns_radius(n, m, d, domain_volume, alpha)
     centers = blocks.centers
     c2 = np.sum(centers * centers, axis=1)
     bc = blocks.n_blocks
@@ -188,7 +218,7 @@ def filtered_knn_points(
                 covered = cand.size >= bc
                 if cand.size:
                     rows = flat.rows_of_blocks(cand)
-                    d2p = np.sum((flat.flat_pts[rows] - queries[qi]) ** 2, axis=1)
+                    d2p = np.sum((flat.points_of_blocks(cand) - queries[qi]) ** 2, axis=1)
                     fine = d2p <= lam_try * lam_try
                     if int(fine.sum()) >= m:
                         out[qi] = _topm(rows[fine], d2p[fine], m, flat)

@@ -47,14 +47,22 @@ class Prediction:
 
 @dataclass
 class TrainIndex:
-    """Host-side training-set structure reused across prediction chunks."""
+    """Host-side training-set structure reused across prediction chunks.
 
-    x: np.ndarray          # (n, d) raw training inputs
-    y: np.ndarray          # (n,) training observations
-    xs: np.ndarray         # (n, d) scaled inputs (structure space)
+    In-core indexes hold the raw/scaled arrays; store-backed indexes (see
+    ``build_train_index(..., stream_chunk=)``) hold lazy row views with
+    ``xs=None``, a store handle, and the cached scaled-domain volume the
+    filtered kNN needs (the one quantity otherwise derived from the full
+    scaled array)."""
+
+    x: np.ndarray          # (n, d) raw training inputs (or lazy row view)
+    y: np.ndarray          # (n,) training observations (or lazy row view)
+    xs: np.ndarray | None  # (n, d) scaled inputs; None when store-backed
     beta: np.ndarray       # (d,) structure scaling
     blocks: BlockStructure # coarse blocks for the filtered kNN
     flat: _FlatBlocks | None = None  # flattened block members, built once
+    store: object = None             # row store behind a streaming index
+    domain_volume: float | None = None
 
 
 def build_train_index(
@@ -64,12 +72,40 @@ def build_train_index(
     m_pred: int,
     n_workers: int = 1,
     seed: int = 0,
+    stream_chunk: int | None = None,
 ) -> TrainIndex:
     """Scale + coarse-block the training set once; reused per chunk.
 
     The flattened block index (``_FlatBlocks``) is cached here: it holds
     the full n x d gather of block members that ``filtered_knn_points``
-    would otherwise rebuild on every query chunk."""
+    would otherwise rebuild on every query chunk.
+
+    Pass ``x_train`` as a row store (``y_train=None``) and/or set
+    ``stream_chunk`` for the out-of-core index: structure comes from
+    mini-batch k-means passes and the flat index serves candidate gathers
+    from the store with a bounded cache (docs/streaming.md). An in-core
+    ``(x, y)`` with ``stream_chunk`` runs the identical code over a
+    ``MemoryStore``, so the two agree bitwise on the same rows."""
+    from repro.data.store import as_store, is_store
+
+    if is_store(x_train) or stream_chunk is not None:
+        from repro.data.streaming import (
+            DEFAULT_STRUCT_BATCH, LazyFlatBlocks, streaming_kmeans_blocks,
+        )
+
+        store = as_store(x_train, y_train)
+        beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (store.d,))
+        bc_train = max(1, store.n_rows // max(4 * m_pred, 64))
+        # Structure passes use the FIXED batch size (like the fit): the
+        # index must not depend on the caller's packing window.
+        blocks, radii, vol = streaming_kmeans_blocks(
+            store, beta, bc_train, n_workers=n_workers, seed=seed,
+            batch_rows=DEFAULT_STRUCT_BATCH,
+        )
+        flat = LazyFlatBlocks(blocks, radii, store, beta)
+        return TrainIndex(x=store.x_rows, y=store.y_rows, xs=None, beta=beta,
+                          blocks=blocks, flat=flat, store=store,
+                          domain_volume=vol)
     x_train = np.asarray(x_train, dtype=np.float64)
     y_train = np.asarray(y_train, dtype=np.float64)
     beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (x_train.shape[1],))
@@ -113,13 +149,24 @@ def pack_queries(
     bc_pred = max(1, n_test // bs_pred)
     test_blocks = build_blocks(xs_test, bc_pred, n_workers, index.beta, seed=seed + 1)
     neigh = filtered_knn_points(index.xs, index.blocks, test_blocks.centers,
-                                m_pred, alpha, flat=index.flat)
+                                m_pred, alpha, flat=index.flat,
+                                domain_volume=index.domain_volume)
+
+    if index.store is not None:
+        # Store-backed index: gather the union of neighbor rows once and
+        # remap, instead of per-block fancy-indexing the full training set
+        # (values and order preserved — packed arrays are bit-identical).
+        from repro.data.streaming import localize_neighbors
+
+        x_tr, y_tr, neigh = localize_neighbors(index.store, neigh)
+    else:
+        x_tr, y_tr = index.x, index.y
 
     bs_max = max(mb.size for mb in test_blocks.members)
     if pad_shapes:
         bs_max = round_up(bs_max, 8)
     packed = pack_prediction(
-        x_test, index.x, index.y, test_blocks, neigh, m_pred, bs_max=bs_max,
+        x_test, x_tr, y_tr, test_blocks, neigh, m_pred, bs_max=bs_max,
         dtype=dtype,
     )
     if offset:
@@ -145,14 +192,26 @@ def iter_query_chunks(
     The single chunking protocol shared by ``predict_sbv`` and the serving
     driver: step clamped to >= bs_pred, per-chunk seed variation, scatter
     offsets, and jit-stable padded shapes in chunked mode all live HERE so
-    the two paths cannot drift."""
-    x_test = np.asarray(x_test, dtype=np.float64)
-    n_test = x_test.shape[0]
+    the two paths cannot drift. ``x_test`` may be a row store, in which
+    case each window is read on demand (``chunk_size`` is then required —
+    reading an out-of-core test set whole would defeat the store)."""
+    from repro.data.store import is_store
+
+    if is_store(x_test):
+        if chunk_size is None:
+            raise ValueError("x_test is a store: pass chunk_size to bound "
+                             "the per-window read")
+        n_test = x_test.n_rows
+        window = lambda a, b: x_test.read_slice(a, b)[0]
+    else:
+        x_test = np.asarray(x_test, dtype=np.float64)
+        n_test = x_test.shape[0]
+        window = lambda a, b: x_test[a:b]
     step = n_test if chunk_size is None else max(int(chunk_size), bs_pred)
     for ci, start in enumerate(range(0, n_test, step)):
         stop = min(n_test, start + step)
         yield ci, pack_queries(
-            index, x_test[start:stop], bs_pred, m_pred, alpha=alpha,
+            index, window(start, stop), bs_pred, m_pred, alpha=alpha,
             seed=seed + ci, n_workers=n_workers, offset=start,
             pad_shapes=chunk_size is not None, dtype=dtype,
         )
@@ -252,6 +311,7 @@ def predict_sbv(
     chunk_size: int | None = None,
     dtype=np.float64,
     n_buckets: int | None = None,
+    stream_chunk: int | None = None,
 ) -> Prediction:
     """Packed block prediction over the full test set.
 
@@ -262,11 +322,25 @@ def predict_sbv(
     stays bounded for arbitrary n_test. ``n_buckets`` executes each chunk
     as size-buckets padded to their own ceilings (docs/packing.md) instead
     of one uniformly-padded batch; mean/var are unchanged (<=1e-10), only
-    padding waste drops."""
+    padding waste drops.
+
+    Out-of-core: ``x_train`` (with ``y_train=None``) and/or ``x_test``
+    may be row stores; ``stream_chunk`` selects the streaming training
+    index (docs/streaming.md). In-core arrays with ``stream_chunk`` take
+    the identical code path, so store-backed and in-core streaming
+    predictions agree bitwise on the same rows."""
+    from repro.data.store import is_store
+
     beta = np.asarray(params.beta if beta_struct is None else beta_struct)
-    x_test = np.asarray(x_test, dtype=np.float64)
-    n_test = x_test.shape[0]
-    index = build_train_index(x_train, y_train, beta, m_pred, n_workers, seed)
+    if is_store(x_test):
+        n_test = x_test.n_rows
+        if chunk_size is None:
+            chunk_size = stream_chunk  # bound the test-window reads too
+    else:
+        x_test = np.asarray(x_test, dtype=np.float64)
+        n_test = x_test.shape[0]
+    index = build_train_index(x_train, y_train, beta, m_pred, n_workers, seed,
+                              stream_chunk=stream_chunk)
 
     mean = np.zeros(n_test)
     var = np.zeros(n_test)

@@ -1,3 +1,7 @@
 from .gp_sim import metarvm_simulate, sample_gp_exact, sample_gp_rff, satellite_drag_like
+from .store import ArrayStore, ArrayStoreWriter, MemoryStore, as_store, is_store
 
-__all__ = ["metarvm_simulate", "sample_gp_exact", "sample_gp_rff", "satellite_drag_like"]
+__all__ = [
+    "metarvm_simulate", "sample_gp_exact", "sample_gp_rff", "satellite_drag_like",
+    "ArrayStore", "ArrayStoreWriter", "MemoryStore", "as_store", "is_store",
+]

@@ -1,0 +1,541 @@
+"""Streaming (out-of-core) SBV construction over a row store.
+
+Every stage of the in-core preprocessing pipeline
+(scale -> block -> order -> NNS -> pack) assumes the full ``(n, d)``
+dataset sits in host RAM. This module rebuilds each stage as a pass over
+``store.iter_chunks(rows)`` windows so the resident working set is
+bounded by the chunk size, not ``n`` — the property that carries the
+paper from 200k points to 50M:
+
+* ``streaming_kmeans_blocks`` — mini-batch k-means over chunk iterators
+  (Sculley-style center updates with per-epoch count resets, so the
+  single-chunk case reduces EXACTLY to Lloyd iterations — the parity
+  hook tests/test_streaming.py pins), then one labeling pass that also
+  accumulates exact centroids, per-dimension extents (for the Eq. 7 NNS
+  radius) and a radius pass against the final centers;
+* ``LazyFlatBlocks`` — the store-backed twin of ``core.nns._FlatBlocks``:
+  same index bookkeeping, but member coordinates are gathered on demand
+  (LRU-cached per block). Block ids are relabeled in center-coordinate
+  order, so the NNS sweep visits spatially adjacent blocks consecutively
+  and the cache turns the gather stream into ~one pass over the store;
+* ``plan_block_chunks`` / ``pack_block_chunk`` / ``PackedChunkSpool`` —
+  conditioning-rank-ordered groups of blocks whose member+neighbor rows
+  fit the ``stream_chunk`` budget, packed via the existing
+  ``pack_blocks`` on a gathered-and-remapped row subset, and spooled to
+  ``.npz`` files so likelihood passes re-read bounded chunks instead of
+  holding the packed dataset.
+
+Bitwise contract: all arithmetic is elementwise or reduction ops whose
+operand order is independent of where the rows live, so a ``MemoryStore``
+and an ``ArrayStore`` holding the same rows produce identical structures,
+packings, and fits (tests/test_streaming.py pins this at 0 difference;
+the 1e-10 tolerances in the acceptance gate cover the chunked-vs-
+monolithic likelihood summation order, not the IO layer).
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.blocks import BlockStructure, most_relevant_dim, scale_inputs
+from repro.core.nns import _FlatBlocks, filtered_nns
+from repro.core.packing import PackedBlocks, pack_blocks
+
+DEFAULT_STRUCT_BATCH = 65536  # rows per structure pass (decoupled from
+                              # stream_chunk so the packing window can vary
+                              # without changing the k-means trajectory)
+ROW_TILE = 2048               # rows per assignment distance tile
+MAX_D2_ENTRIES = 2 << 20      # bound on distance-tile size (entries)
+
+
+# -- chunked moments -------------------------------------------------------
+
+
+def streaming_moments(store, batch_rows: int = DEFAULT_STRUCT_BATCH):
+    """(mean, variance) of y accumulated chunk-wise (population variance,
+    matching ``np.var`` up to summation order)."""
+    n = store.n_rows
+    s = s2 = 0.0
+    for _, _, yw in store.iter_chunks(batch_rows):
+        s += float(np.sum(yw))
+        s2 += float(np.sum(yw * yw))
+    mean = s / max(n, 1)
+    return mean, max(s2 / max(n, 1) - mean * mean, 0.0)
+
+
+# -- mini-batch k-means blocking ------------------------------------------
+
+
+def _center_tile(n_centers: int) -> int:
+    """Centers per distance tile: keeps row_tile x center_tile bounded."""
+    return max(32, min(2048, MAX_D2_ENTRIES // ROW_TILE))
+
+
+def _assign_chunk(xs: np.ndarray, centers: np.ndarray, c2: np.ndarray):
+    """Nearest-center label per row, tiled over rows AND centers so the
+    distance buffer never exceeds ROW_TILE x center-tile entries.
+
+    The assignment is memory-bound (n x k distance entries dwarf the
+    rank-d GEMM), so the tiles run in float32 with the row-norm term
+    dropped — ``argmin_j ||x - c_j||^2 = argmin_j (c2_j - 2 x.c_j)`` —
+    and in-place updates: ~3x less traffic than the naive f64 broadcast.
+    Labels are a clustering heuristic (everything downstream that needs
+    exactness — radii, centroids, NNS — recomputes in f64), and both
+    store backends run the identical instruction stream, so bitwise
+    memory/disk parity is preserved. Strict-< running best keeps
+    numpy's first-minimum tie-breaking across center tiles."""
+    n, k = xs.shape[0], centers.shape[0]
+    ct = _center_tile(k)
+    cen32 = np.ascontiguousarray(centers.T, dtype=np.float32)  # (d, k)
+    c232 = c2.astype(np.float32)
+    labels = np.empty(n, dtype=np.int64)
+    for rs in range(0, n, ROW_TILE):
+        xr = xs[rs:rs + ROW_TILE].astype(np.float32)
+        rows = np.arange(xr.shape[0])
+        best = np.full(xr.shape[0], np.inf, dtype=np.float32)
+        lab = np.zeros(xr.shape[0], dtype=np.int64)
+        for cs in range(0, k, ct):
+            d2 = xr @ cen32[:, cs:cs + ct]
+            d2 *= -2.0
+            d2 += c232[cs:cs + ct][None, :]
+            j = np.argmin(d2, axis=1)
+            v = d2[rows, j]
+            upd = v < best
+            best[upd] = v[upd]
+            lab[upd] = j[upd] + cs
+        labels[rs:rs + ROW_TILE] = lab
+    return labels
+
+
+def _label_sums(labels: np.ndarray, xs: np.ndarray, k: int):
+    """Per-label row counts and coordinate sums (bincount per dim: C-fast)."""
+    counts = np.bincount(labels, minlength=k).astype(np.float64)
+    sums = np.stack(
+        [np.bincount(labels, weights=xs[:, j], minlength=k)
+         for j in range(xs.shape[1])], axis=1,
+    )
+    return counts, sums
+
+
+def streaming_kmeans_blocks(
+    store,
+    beta: np.ndarray,
+    n_blocks: int,
+    n_workers: int = 1,
+    seed: int = 0,
+    epochs: int = 2,
+    batch_rows: int = DEFAULT_STRUCT_BATCH,
+    ordering: str = "random",
+):
+    """Mini-batch k-means blocking over chunk iterators.
+
+    Returns ``(BlockStructure, radii, domain_volume)`` — everything the
+    filtered NNS needs, with nothing larger than index arrays held in
+    RAM. Deterministic given (store contents, seed, batch_rows); with
+    ``batch_rows >= n`` every epoch is exactly one Lloyd iteration.
+
+    Block ids are assigned in center-coordinate order along the most
+    relevant dimension, so id-ordered sweeps (the NNS loop) visit
+    spatially adjacent blocks consecutively — that locality is what makes
+    the store-backed lazy gather cache effective.
+    """
+    rng = np.random.default_rng(seed)
+    n, d = store.n_rows, store.d
+    beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (d,))
+    k = min(int(n_blocks), n)
+
+    init_idx = rng.choice(n, size=k, replace=False)
+    centers = scale_inputs(store.read_rows(init_idx)[0], beta)
+
+    for _ in range(max(int(epochs), 0)):
+        counts = np.zeros(k)
+        c2 = np.sum(centers * centers, axis=1)
+        for _, xw, _ in store.iter_chunks(batch_rows):
+            xs = scale_inputs(xw, beta)
+            lab = _assign_chunk(xs, centers, c2)
+            k_c, sums = _label_sums(lab, xs, k)
+            counts += k_c
+            nz = k_c > 0
+            centers[nz] += (sums[nz] - k_c[nz, None] * centers[nz]) / counts[nz, None]
+            c2 = np.sum(centers * centers, axis=1)
+        empty = counts == 0
+        if empty.any():
+            re_idx = rng.choice(n, size=int(empty.sum()), replace=False)
+            centers[empty] = scale_inputs(store.read_rows(re_idx)[0], beta)
+
+    # Final labeling pass: exact centroids + scaled-domain extents.
+    labels = np.empty(n, dtype=np.int64)
+    counts = np.zeros(k)
+    sums = np.zeros((k, d))
+    mins = np.full(d, np.inf)
+    maxs = np.full(d, -np.inf)
+    c2 = np.sum(centers * centers, axis=1)
+    for start, xw, _ in store.iter_chunks(batch_rows):
+        xs = scale_inputs(xw, beta)
+        lab = _assign_chunk(xs, centers, c2)
+        labels[start:start + xs.shape[0]] = lab
+        k_c, s_c = _label_sums(lab, xs, k)
+        counts += k_c
+        sums += s_c
+        np.minimum(mins, xs.min(axis=0), out=mins)
+        np.maximum(maxs, xs.max(axis=0), out=maxs)
+
+    # Compact away empty blocks, then relabel in center-coordinate order.
+    occupied = np.nonzero(counts > 0)[0]
+    centers = sums[occupied] / counts[occupied][:, None]
+    dprime = most_relevant_dim(beta)
+    coord_order = np.argsort(centers[:, dprime], kind="stable")
+    centers = centers[coord_order]
+    bc = occupied.size
+    old_to_new = np.full(k, -1, dtype=np.int64)
+    old_to_new[occupied[coord_order]] = np.arange(bc)
+    labels = old_to_new[labels]
+
+    # Radius pass against the FINAL centers (upper bound the coarse
+    # filter relies on; running centers would under-estimate it).
+    r2 = np.zeros(bc)
+    for start, xw, _ in store.iter_chunks(batch_rows):
+        xs = scale_inputs(xw, beta)
+        lab = labels[start:start + xs.shape[0]]
+        d2 = np.sum((xs - centers[lab]) ** 2, axis=1)
+        np.maximum.at(r2, lab, d2)
+    radii = np.sqrt(r2)
+
+    # Members from one stable argsort (ascending indices within a block,
+    # matching np.nonzero order in the in-core builder).
+    by_block = np.argsort(labels, kind="stable")
+    sizes = np.bincount(labels, minlength=bc)
+    members = np.split(by_block, np.cumsum(sizes)[:-1])
+
+    # Owner shard per block by quantile bucketing of the center coordinate
+    # (same locality property as the per-point Alg. 2 partition).
+    if n_workers > 1:
+        qs = np.quantile(centers[:, dprime],
+                         np.linspace(0.0, 1.0, n_workers + 1)[1:-1])
+        owners = np.searchsorted(qs, centers[:, dprime], side="right")
+    else:
+        owners = np.zeros(bc, dtype=np.int64)
+
+    if ordering == "random":
+        order = rng.permutation(bc)
+    elif ordering == "coord":
+        order = np.arange(bc)  # ids are already in coordinate order
+    elif ordering == "maxmin":
+        from repro.core.blocks import _maxmin_order
+
+        order = _maxmin_order(centers, rng)  # centers are in-RAM: bc x d
+    else:
+        raise ValueError(f"unknown streaming ordering {ordering!r}")
+    rank_of_block = np.empty(bc, dtype=np.int64)
+    rank_of_block[order] = np.arange(bc)
+
+    ext = maxs - mins
+    med = np.median(ext[ext > 0]) if np.any(ext > 0) else 1.0
+    ext = np.maximum(ext, 1e-6 * med)
+    domain_volume = float(np.prod(ext))
+
+    blocks = BlockStructure(
+        labels=labels,
+        order=np.asarray(order, dtype=np.int64),
+        rank_of_block=rank_of_block,
+        centers=centers,
+        owners=np.asarray(owners, dtype=np.int32),
+        members=members,
+    )
+    return blocks, radii, domain_volume
+
+
+# -- store-backed flat block index ----------------------------------------
+
+
+class LazyFlatBlocks(_FlatBlocks):
+    """``_FlatBlocks`` over a store: coordinates gathered on demand.
+
+    Holds the same index bookkeeping (sizes/starts/flat_idx/flat_rank/
+    radii) but no ``flat_pts``; ``points_of_blocks`` serves scaled member
+    coordinates from a bytes-bounded per-block LRU cache, batching all
+    cache misses of a call into one ``read_rows`` gather.
+    """
+
+    def __init__(self, blocks: BlockStructure, radii: np.ndarray, store,
+                 beta: np.ndarray, cache_bytes: int = 32 << 20):
+        sizes = np.asarray([mb.size for mb in blocks.members], dtype=np.int64)
+        self.sizes = sizes
+        self.starts = np.concatenate([[0], np.cumsum(sizes)])
+        self.flat_idx = (
+            np.concatenate(blocks.members) if blocks.n_blocks else np.empty(0, np.int64)
+        )
+        self.flat_rank = np.repeat(blocks.rank_of_block, sizes)
+        self.radii = np.asarray(radii)
+        self.n_rows = store.n_rows
+        self.d = store.d
+        self._store = store
+        self._beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (store.d,))
+        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
+        self._cache_bytes = 0
+        self._cache_cap = int(cache_bytes)
+        self.gathered_rows = 0  # telemetry: store rows actually read
+
+    def _evict(self) -> None:
+        while self._cache_bytes > self._cache_cap and len(self._cache) > 1:
+            _, old = self._cache.popitem(last=False)
+            self._cache_bytes -= old.nbytes
+
+    def points_of_blocks(self, block_ids: np.ndarray) -> np.ndarray:
+        block_ids = np.asarray(block_ids, dtype=np.int64)
+        if block_ids.size == 0:
+            return np.empty((0, self.d))
+        missing = [int(b) for b in block_ids if int(b) not in self._cache]
+        if missing:
+            rows = np.concatenate(
+                [self.flat_idx[self.starts[b]:self.starts[b + 1]] for b in missing]
+            )
+            pts = scale_inputs(self._store.read_rows(rows)[0], self._beta)
+            self.gathered_rows += rows.size
+            off = 0
+            for b in missing:
+                k = int(self.sizes[b])
+                self._cache[b] = pts[off:off + k]
+                self._cache_bytes += self._cache[b].nbytes
+                off += k
+            self._evict()
+        out = []
+        for b in block_ids:
+            b = int(b)
+            pts = self._cache[b]
+            self._cache.move_to_end(b)
+            out.append(pts)
+        return out[0] if len(out) == 1 else np.concatenate(out)
+
+
+def streaming_filtered_nns(
+    store, blocks: BlockStructure, radii: np.ndarray, beta: np.ndarray,
+    m: int, alpha: float = 100.0, domain_volume: float | None = None,
+    cache_bytes: int = 32 << 20,
+):
+    """Filtered preceding-block NNS with store-backed candidate gathers.
+
+    The query sweep runs in block-id order == center-coordinate order
+    (see ``streaming_kmeans_blocks``), so consecutive queries share most
+    of their candidate blocks and the LRU cache bounds re-reads.
+    Returns ``(neighbors, flat)`` so callers can keep the warm index.
+    """
+    flat = LazyFlatBlocks(blocks, radii, store, beta, cache_bytes=cache_bytes)
+    bc = max(blocks.n_blocks, 1)
+    center_chunk = max(16, min(2048, MAX_D2_ENTRIES // bc))
+    neigh = filtered_nns(None, blocks, m, alpha=alpha, center_chunk=center_chunk,
+                         flat=flat, domain_volume=domain_volume)
+    return neigh, flat
+
+
+# -- chunked packing -------------------------------------------------------
+
+
+def plan_block_chunks(blocks: BlockStructure, neigh: list, m: int,
+                      stream_chunk: int) -> list[np.ndarray]:
+    """Group conditioning ranks so each group's member+neighbor rows fit
+    the ``stream_chunk`` budget. Groups are contiguous in rank order;
+    a single oversized block still gets its own chunk (the budget is a
+    target, not a validity condition)."""
+    plans: list[np.ndarray] = []
+    cur: list[int] = []
+    rows = 0
+    for rank, b in enumerate(blocks.order):
+        cost = int(blocks.members[b].size) + min(len(neigh[b]), m)
+        if cur and rows + cost > stream_chunk:
+            plans.append(np.asarray(cur, dtype=np.int64))
+            cur, rows = [], 0
+        cur.append(rank)
+        rows += cost
+    if cur:
+        plans.append(np.asarray(cur, dtype=np.int64))
+    return plans
+
+
+def pack_block_chunk(
+    store, blocks: BlockStructure, neigh: list, ranks: np.ndarray,
+    m: int, bs_max: int, dtype=np.float64,
+) -> PackedBlocks:
+    """Pack one rank-chunk by gathering the union of its member+neighbor
+    rows once and remapping indices into the gathered subset — the packed
+    arrays are bit-identical to the same blocks' slices of an in-core
+    ``pack_blocks`` (gathers preserve values and relative order)."""
+    bids = blocks.order[ranks]
+    pieces = [blocks.members[b] for b in bids] + [neigh[b][:m] for b in bids]
+    rows_needed = np.unique(np.concatenate(pieces)) if pieces else np.empty(0, np.int64)
+    xg, yg = store.read_rows(rows_needed)
+
+    def remap(a):
+        return np.searchsorted(rows_needed, a)
+
+    kb = len(bids)
+    mini = BlockStructure(
+        labels=np.empty(0, dtype=np.int64),
+        order=np.arange(kb, dtype=np.int64),
+        rank_of_block=np.arange(kb, dtype=np.int64),
+        centers=np.zeros((kb, store.d)),
+        owners=np.asarray([blocks.owners[b] for b in bids], dtype=np.int32),
+        members=[remap(blocks.members[b]) for b in bids],
+    )
+    neigh_local = [remap(neigh[b][:m]) for b in bids]
+    return pack_blocks(xg, yg, mini, neigh_local, m, bs_max=bs_max, dtype=dtype)
+
+
+class PackedChunkSpool:
+    """On-disk cache of packed chunk pieces for one structure round.
+
+    The likelihood inner loop re-reads every piece once per optimizer
+    step; spooling to uncompressed ``.npz`` keeps the resident set at one
+    piece while the page cache absorbs the re-read traffic. float64
+    round-trips bit-exactly, so spooling never perturbs the fit.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self._files: list[str] = []
+        self.packed_bytes_max = 0
+        self.packed_bytes_total = 0
+
+    def __len__(self) -> int:
+        return len(self._files)
+
+    def add(self, packed: PackedBlocks) -> None:
+        f = os.path.join(self.path, f"chunk_{len(self._files):05d}.npz")
+        np.savez(f, blk_x=packed.blk_x, blk_y=packed.blk_y,
+                 blk_mask=packed.blk_mask, nn_x=packed.nn_x,
+                 nn_y=packed.nn_y, nn_mask=packed.nn_mask,
+                 owners=packed.owners)
+        nbytes = sum(a.nbytes for a in (packed.blk_x, packed.blk_y,
+                                        packed.blk_mask, packed.nn_x,
+                                        packed.nn_y, packed.nn_mask))
+        self.packed_bytes_max = max(self.packed_bytes_max, nbytes)
+        self.packed_bytes_total += nbytes
+        self._files.append(f)
+
+    def __iter__(self):
+        for f in self._files:
+            with np.load(f) as z:
+                yield PackedBlocks(
+                    blk_x=z["blk_x"], blk_y=z["blk_y"], blk_mask=z["blk_mask"],
+                    nn_x=z["nn_x"], nn_y=z["nn_y"], nn_mask=z["nn_mask"],
+                    owners=z["owners"],
+                )
+
+    def cleanup(self) -> None:
+        for f in self._files:
+            try:
+                os.remove(f)
+            except OSError:
+                pass
+        self._files = []
+        try:
+            os.rmdir(self.path)
+        except OSError:
+            pass
+
+
+@dataclass
+class StreamStructure:
+    """One outer round's streaming preprocessing product."""
+
+    blocks: BlockStructure
+    neigh: list
+    flat: LazyFlatBlocks
+    domain_volume: float
+    plan: list
+    bs_max: int
+
+
+def streaming_preprocess(
+    store, beta: np.ndarray, cfg, stream_chunk: int,
+    struct_batch: int | None = None, cache_bytes: int = 32 << 20,
+) -> StreamStructure:
+    """scale -> mini-batch k-means -> order -> store-backed NNS -> plan.
+
+    The streaming counterpart of ``core.pipeline.preprocess``; clustering
+    is mini-batch k-means (the one pass-structured algorithm) regardless
+    of ``cfg.clustering``, and the structure batch size is decoupled from
+    ``stream_chunk`` so the packing window can change without changing
+    the block structure."""
+    blocks, radii, vol = streaming_kmeans_blocks(
+        store, beta, cfg.n_blocks, n_workers=cfg.n_workers, seed=cfg.seed,
+        batch_rows=struct_batch or DEFAULT_STRUCT_BATCH,
+        ordering=cfg.ordering,
+    )
+    neigh, flat = streaming_filtered_nns(
+        store, blocks, radii, beta, cfg.m, alpha=cfg.alpha,
+        domain_volume=vol, cache_bytes=cache_bytes,
+    )
+    plan = plan_block_chunks(blocks, neigh, cfg.m, stream_chunk)
+    bs_max = int(max(mb.size for mb in blocks.members))
+    if cfg.bs_max is not None:
+        bs_max = max(bs_max, cfg.bs_max)
+    return StreamStructure(blocks=blocks, neigh=neigh, flat=flat,
+                           domain_volume=vol, plan=plan, bs_max=bs_max)
+
+
+# -- prediction-side gather ------------------------------------------------
+
+
+def working_set_model(stream_stats: dict, n_rows: int, d: int, m: int,
+                      stream_chunk: int, n_caches: int = 2) -> dict:
+    """Bytes model of the streaming fit's resident working set.
+
+    Shared by the RSS gates (tests/test_streaming.py and
+    benchmarks/fig_streaming_scale.py) so they can assert
+    ``peak_rss_delta <= 2 x total`` against one definition. Terms:
+
+    * chunk windows — raw rows + scaled copy + one transient (3x);
+    * packed chunk  — host .npz load + device transfer + arena slack (4x);
+    * device grad   — the ``lax.map``-batched checkpointed backward keeps
+      ~16 live buffer sets of ``_MAP_BATCH x (bs_max+m)^2`` (forward
+      recompute + cotangents), independent of chunk size;
+    * NNS scan      — worst-case candidate gather: with a near-isotropic
+      beta in higher d the coarse filter can admit most blocks for one
+      query, so the transient is O(n x d) (concat + squared distances);
+    * index arrays  — labels/members/flat_idx/flat_rank + neighbor lists;
+    * gather caches — the LRU block-point caches (fit and predict index).
+
+    The same constants applied to the WHOLE dataset give
+    ``incore_total``: what the monolithic path would hold resident. The
+    gates require ``2 x total < incore_total`` so the ceiling actually
+    distinguishes streaming from slurping.
+    """
+    from repro.core.fit import _MAP_BATCH
+
+    st = stream_stats
+    joint2 = (st["bs_max"] + m) ** 2
+    terms = {
+        "chunk_windows": 3 * stream_chunk * (d + 1) * 8,
+        "packed_chunk": 4 * st["packed_chunk_bytes_max"],
+        "device_grad": 16 * _MAP_BATCH * joint2 * 8,
+        "nns_scan": 3 * n_rows * d * 8,
+        "index_arrays": 4 * n_rows * 8 + st["bc"] * m * 8,
+        "gather_caches": n_caches * (32 << 20),
+    }
+    total = sum(terms.values())
+    incore_total = (
+        2 * n_rows * (d + 1) * 8      # raw + scaled arrays resident
+        + 2 * st["spool_bytes"]        # packed dataset, host + device
+        + 4 * st["bc"] * joint2 * 8    # vmapped grad live set over all blocks
+    )
+    return {"terms": terms, "total": total, "incore_total": incore_total}
+
+
+def localize_neighbors(store, neighbors: list):
+    """Gather the union of neighbor rows once and remap each list into the
+    gathered subset — hands ``pack_prediction`` small in-core arrays in
+    place of the full training set. Values and per-list order are
+    preserved, so the packed arrays are bit-identical to the in-core
+    path's."""
+    if neighbors:
+        rows_needed = np.unique(np.concatenate([np.asarray(nb) for nb in neighbors]))
+    else:
+        rows_needed = np.empty(0, np.int64)
+    xg, yg = store.read_rows(rows_needed)
+    remapped = [np.searchsorted(rows_needed, np.asarray(nb)) for nb in neighbors]
+    return xg, yg, remapped

@@ -32,7 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models.model import init_params, prefill_step, serve_step
 from repro.sharding.compat import set_mesh
-from repro.sharding.rules import batch_spec, cache_specs, param_specs, tp_size
+from repro.sharding.rules import cache_specs, param_specs, tp_size
 from repro.launch.train import make_mesh
 
 
@@ -83,6 +83,12 @@ def serve_gp(argv=None):
     ap.add_argument("--compare", action="store_true",
                     help="race sync vs double-buffered on the same workload "
                          "and cross-check parity against predict_sbv")
+    ap.add_argument("--train-store", default=None, metavar="DIR",
+                    help="serve from an on-disk ArrayStore training set "
+                         "(out-of-core index; docs/streaming.md) — requires "
+                         "fitted params, so only --dataset synthetic")
+    ap.add_argument("--stream-chunk", type=int, default=None,
+                    help="rows per streaming-index pass (with --train-store)")
     args = ap.parse_args(argv)
     dtype = np.float32 if args.dtype == "f32" else np.float64
 
@@ -93,7 +99,18 @@ def serve_gp(argv=None):
         predict_pipelined, predict_synchronous,
     )
 
-    if args.dataset == "synthetic":
+    if args.train_store:
+        from repro.data.store import ArrayStore
+
+        if args.dataset != "synthetic":
+            raise SystemExit("--train-store serves synthetic-generator "
+                             "params; fit other datasets via fit_gp first")
+        store = ArrayStore(args.train_store)
+        # Kernel params from the same generator family (the store is
+        # assumed to hold a draw of it); the index is built out-of-core.
+        _, _, params = paper_synthetic(args.seed, 128, d=store.d)
+        x, y = store, None
+    elif args.dataset == "synthetic":
         x, y, params = paper_synthetic(args.seed, args.n_train)
     else:
         x, y = load_dataset(args.dataset, args.n_train, args.seed)
@@ -104,7 +121,8 @@ def serve_gp(argv=None):
         params = fit_sbv(x, y, cfg, inner_steps=30, outer_rounds=1).params
 
     rng = np.random.default_rng(args.seed + 1)
-    x_test = rng.uniform(size=(args.n_test, x.shape[1]))
+    d = x.d if args.train_store else x.shape[1]
+    x_test = rng.uniform(size=(args.n_test, d))
 
     mesh = None
     if args.workers > 1:
@@ -115,7 +133,7 @@ def serve_gp(argv=None):
     pipe_cfg = PipelineConfig(
         bs_pred=args.bs_pred, m_pred=args.m_pred, backend=args.backend,
         dtype=dtype, chunk_size=args.chunk, n_workers=args.workers,
-        n_buckets=args.buckets,
+        n_buckets=args.buckets, stream_chunk=args.stream_chunk,
     )
     cfg = GPServerConfig(
         pipeline=pipe_cfg,
@@ -128,7 +146,8 @@ def serve_gp(argv=None):
 
     t0 = time.time()
     server = GPServer(params, x, y, cfg, mesh=mesh)
-    print(f"[serve-gp] train index over {len(y)} pts: {time.time()-t0:.2f}s")
+    n_train = x.n_rows if args.train_store else len(y)
+    print(f"[serve-gp] train index over {n_train} pts: {time.time()-t0:.2f}s")
 
     with server:
         t0 = time.time()
@@ -180,7 +199,8 @@ def serve_gp(argv=None):
         ref = predict_sbv(params, x, y, x_test, bs_pred=args.bs_pred,
                           m_pred=args.m_pred, seed=args.seed, n_sims=2,
                           chunk_size=args.chunk, n_workers=args.workers,
-                          backend="ref", dtype=dtype)
+                          backend="ref", dtype=dtype,
+                          stream_chunk=args.stream_chunk)
         err = max(abs(m_r - ref.mean).max(), abs(v_r - ref.var).max())
         tol = 1e-5 if dtype == np.float64 else 1e-3
         print(f"[serve-gp] compare parity vs predict_sbv: max|delta|={err:.2e}")

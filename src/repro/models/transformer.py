@@ -47,12 +47,12 @@ def _residual_sp(x, cfg):
     if not _SEQ_PARALLEL or x.shape[1] == 1 or cfg.n_experts:
         return x
     return constrain(x, BATCH, "model", None)
-from .layers import mlp_apply, mlp_init, rms_norm, swiglu
+from .layers import mlp_apply, mlp_init, rms_norm
 from .moe import moe_forward, moe_init
 from .rwkv6 import (
     rwkv6_channel_mix, rwkv6_init, rwkv6_time_mix, rwkv6_time_mix_decode,
 )
-from .ssm import mamba2_decode, mamba2_forward, mamba2_init, mamba2_init_cache
+from .ssm import mamba2_decode, mamba2_forward, mamba2_init
 
 
 def padded_experts(cfg, tp: int = 1) -> int:

@@ -51,6 +51,16 @@ class PipelineConfig:
     n_workers: int = 1
     prefetch: int = 2         # packed chunks in flight (2 = double buffer)
     n_buckets: int | None = None  # size-bucketed micro-batches (docs/packing.md)
+    stream_chunk: int | None = None  # out-of-core train index (docs/streaming.md)
+
+
+def _n_rows(x_test) -> int:
+    """Row count of an in-core array OR a row store."""
+    from repro.data.store import is_store
+
+    if is_store(x_test):
+        return x_test.n_rows
+    return int(np.asarray(x_test).shape[0])
 
 
 def make_chunk_split(cfg: PipelineConfig):
@@ -142,8 +152,10 @@ def predict_synchronous(
 ) -> tuple[np.ndarray, np.ndarray]:
     """The strictly serial chunk loop (pack -> compute -> block -> scatter).
 
-    Kept as the pipeline's correctness twin and benchmark baseline."""
-    n_test = int(np.asarray(x_test).shape[0])
+    Kept as the pipeline's correctness twin and benchmark baseline.
+    ``x_test`` may be a row store; windows are then read on demand inside
+    ``iter_query_chunks``."""
+    n_test = _n_rows(x_test)
     mean = np.zeros(n_test)
     var = np.zeros(n_test)
     split = make_chunk_split(cfg)
@@ -169,8 +181,10 @@ def predict_pipelined(
 
     While the device computes chunk k, the host scatters chunk k-1 and the
     producer thread packs chunk k+1 (numpy releases the GIL in the hot
-    gathers, so the threads genuinely overlap)."""
-    n_test = int(np.asarray(x_test).shape[0])
+    gathers, so the threads genuinely overlap). With a store-backed
+    ``x_test`` the producer also does the window READS off the critical
+    path — IO overlaps device compute exactly like packing does."""
+    n_test = _n_rows(x_test)
     mean = np.zeros(n_test)
     var = np.zeros(n_test)
     if n_test == 0:

@@ -95,6 +95,7 @@ class GPServer:
         self.index: TrainIndex = build_train_index(
             x_train, y_train, beta, cfg.m_pred,
             n_workers=cfg.n_workers, seed=self.config.seed,
+            stream_chunk=cfg.stream_chunk,
         )
         self.d = self.index.x.shape[1]
         self._batcher = MicroBatcher(self.config.policy)
@@ -168,8 +169,15 @@ class GPServer:
         real traffic arrives (first-compile cost off the critical path)."""
         n = n_points or max(self.config.pipeline.bs_pred * 8, 64)
         rng = np.random.default_rng(self.config.seed + 17)
-        lo = self.index.x.min(axis=0)
-        hi = self.index.x.max(axis=0)
+        if self.index.store is not None:
+            # Store-backed index: bounding box from a bounded row probe
+            # instead of a full scan (warmup only needs plausible inputs).
+            probe, _ = self.index.store.read_slice(
+                0, min(4096, self.index.store.n_rows))
+            lo, hi = probe.min(axis=0), probe.max(axis=0)
+        else:
+            lo = self.index.x.min(axis=0)
+            hi = self.index.x.max(axis=0)
         x = lo + (hi - lo) * rng.uniform(size=(n, self.d))
         fut = self.submit(x)
         self.flush()

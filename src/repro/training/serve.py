@@ -5,10 +5,9 @@ These are the functions the decode_32k / long_500k dry-run cells lower:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.models.model import make_empty_cache, prefill_step, serve_step
+from repro.models.model import prefill_step, serve_step
 
 
 def make_prefill_step(cfg, cache_len: int, tp: int = 1):

@@ -1,10 +1,9 @@
 """MLE fit + prediction behaviour on synthetic data."""
 import numpy as np
-import pytest
 
 from repro.core import KernelParams, SBVConfig
 from repro.core.fit import fit_neldermead, fit_sbv
-from repro.core.predict import mspe, predict_sbv, rmspe
+from repro.core.predict import mspe, predict_sbv
 from repro.data.gp_sim import (
     metarvm_dataset, metarvm_simulate, paper_synthetic, sample_gp_exact, sample_gp_rff,
     satellite_drag_like,

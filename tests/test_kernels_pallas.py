@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.core import KernelParams, SBVConfig, preprocess
 from repro.core.vecchia import packed_loglik
 from repro.kernels import ops
-from repro.kernels.ref import matern_cov_ref, sbv_loglik_ref
+from repro.kernels.ref import matern_cov_ref
 from repro.kernels.sbv_loglik import sbv_loglik_pallas
 
 

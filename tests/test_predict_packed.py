@@ -8,7 +8,6 @@ Three contracts (ISSUE acceptance criteria):
 """
 import numpy as np
 import pytest
-import jax.numpy as jnp
 
 from repro.core import KernelParams, exact_predict, predict_sbv
 from repro.core.packing import PackedPrediction, pack_prediction

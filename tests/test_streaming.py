@@ -1,0 +1,349 @@
+"""Out-of-core store + streaming construction invariants (docs/streaming.md).
+
+The load-bearing contract: WHERE the rows live must be invisible to the
+math. A disk-backed ``ArrayStore`` and an in-RAM ``MemoryStore`` holding
+the same rows must produce bit-identical structures, fits and
+predictions (the IO layer adds zero numerical change), and the chunked
+likelihood dispatch must match the monolithic in-core program to 1e-10
+(only float summation ORDER differs). Plus: store round-trip/manifest
+integrity, chunk-iterator boundary cases, single-batch mini-batch
+k-means == Lloyd, and a bounded-RSS 200k-point smoke fit.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.fit import fit_sbv
+from repro.core.pipeline import SBVConfig
+from repro.core.predict import predict_sbv
+from repro.data.gp_sim import paper_synthetic
+from repro.data.store import ArrayStore, MemoryStore, as_store, is_store
+
+pytestmark = pytest.mark.streaming
+
+
+@pytest.fixture(scope="module")
+def small():
+    x, y, params = paper_synthetic(seed=0, n=1500, d=4)
+    return x, y, params
+
+
+def _params_equal(a, b):
+    return max(
+        np.abs(np.asarray(getattr(a, f)) - np.asarray(getattr(b, f))).max()
+        for f in ("log_sigma2", "log_beta", "log_nugget")
+    )
+
+
+# -- store round-trip and manifest integrity ------------------------------
+
+
+def test_store_roundtrip_and_gather(tmp_path, small):
+    x, y, _ = small
+    st = ArrayStore.from_arrays(str(tmp_path / "s"), x, y, shard_rows=400)
+    assert (st.n_rows, st.d, st.n_shards) == (1500, 4, 4)
+    st.verify()
+    xa, ya = st.read_all()
+    assert np.array_equal(xa, x) and np.array_equal(ya, y)
+    # Order-preserving gather across shards, duplicates included.
+    idx = np.array([1499, 0, 401, 400, 399, 401])
+    xg, yg = st.read_rows(idx)
+    assert np.array_equal(xg, x[idx]) and np.array_equal(yg, y[idx])
+    with pytest.raises(IndexError):
+        st.read_rows(np.array([1500]))
+    assert is_store(st) and is_store(MemoryStore(x, y)) and not is_store(x)
+    assert as_store(st) is st
+
+
+def test_writer_appends_span_shards(tmp_path, small):
+    x, y, _ = small
+    with ArrayStore.create(str(tmp_path / "w"), 4, shard_rows=512) as w:
+        for a in range(0, 1500, 613):  # deliberately shard-misaligned
+            w.append(x[a:a + 613], y[a:a + 613])
+    st = ArrayStore(str(tmp_path / "w"))
+    assert st.n_rows == 1500 and st.n_shards == 3
+    xa, ya = st.read_all()
+    assert np.array_equal(xa, x) and np.array_equal(ya, y)
+
+
+def test_manifest_integrity_checks(tmp_path, small):
+    x, y, _ = small
+    path = str(tmp_path / "m")
+    ArrayStore.from_arrays(path, x, y, shard_rows=400)
+    with open(os.path.join(path, "manifest.json")) as f:
+        m = json.load(f)
+    m["n_rows"] = 9999
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(m, f)
+    with pytest.raises(ValueError, match="corrupt manifest"):
+        ArrayStore(path)
+    m["n_rows"] = 1500
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(m, f)
+    os.remove(os.path.join(path, "x_00002.npy"))
+    with pytest.raises(FileNotFoundError, match="missing shards"):
+        ArrayStore(path)
+    with pytest.raises(FileNotFoundError):
+        ArrayStore(str(tmp_path / "not-a-store"))
+
+
+def test_iter_chunks_boundaries(tmp_path, small):
+    x, y, _ = small
+    st = ArrayStore.from_arrays(str(tmp_path / "c"), x, y, shard_rows=400)
+    # Ragged last window, windows spanning shard boundaries.
+    ws = list(st.iter_chunks(700))
+    assert [w[0] for w in ws] == [0, 700, 1400]
+    assert [w[1].shape[0] for w in ws] == [700, 700, 100]
+    assert np.array_equal(np.concatenate([w[1] for w in ws]), x)
+    # Degenerate single-chunk case (rows >= n).
+    ws = list(st.iter_chunks(10_000))
+    assert len(ws) == 1 and ws[0][1].shape[0] == 1500
+    # Default window = manifest shard size.
+    assert [w[1].shape[0] for w in st.iter_chunks()] == [400, 400, 400, 300]
+    # MemoryStore speaks the same protocol (same windows, same rows).
+    ws_d = list(st.iter_chunks(700))
+    ws_m = list(MemoryStore(x, y).iter_chunks(700))
+    assert len(ws_d) == len(ws_m)
+    assert all(a[0] == b[0] and np.array_equal(a[1], b[1])
+               for a, b in zip(ws_d, ws_m))
+
+
+# -- streaming k-means ----------------------------------------------------
+
+
+def test_single_batch_streaming_kmeans_is_lloyd(small):
+    """With batch_rows >= n and per-epoch count resets, every epoch must
+    reduce exactly to a Lloyd iteration (same partition of the data).
+    The reference below re-implements Lloyd's M-step independently but
+    shares the tiled assignment helper, so the claim under test is the
+    mini-batch update algebra (per-epoch resets), not f32 tie-breaking."""
+    from repro.data.streaming import _assign_chunk, streaming_kmeans_blocks
+
+    x, y, _ = small
+    beta = np.full(4, 0.5)
+    k, epochs, seed = 24, 3, 3
+    blocks, radii, vol = streaming_kmeans_blocks(
+        MemoryStore(x, y), beta, k, seed=seed, epochs=epochs,
+        batch_rows=10_000,
+    )
+
+    # Reference Lloyd with the identical init draw.
+    xs = x / beta
+    rng = np.random.default_rng(seed)
+    centers = xs[rng.choice(len(xs), size=k, replace=False)]
+    for _ in range(epochs):
+        lab = _assign_chunk(xs, centers, np.sum(centers * centers, 1))
+        for j in range(k):
+            if np.any(lab == j):
+                centers[j] = xs[lab == j].mean(axis=0)
+    lab = _assign_chunk(xs, centers, np.sum(centers * centers, 1))
+
+    # Same partition up to the coordinate relabeling the streaming path
+    # applies for gather locality.
+    for j in np.unique(lab):
+        assert np.unique(blocks.labels[lab == j]).size == 1
+    assert blocks.n_blocks == np.unique(lab).size
+    # Radii bound every member distance to its final center.
+    for b in range(blocks.n_blocks):
+        mb = blocks.members[b]
+        r = np.sqrt(np.max(np.sum((xs[mb] - blocks.centers[b]) ** 2, axis=1)))
+        assert r <= radii[b] + 1e-12
+    assert vol > 0
+
+
+def test_streaming_kmeans_disk_equals_memory(tmp_path, small):
+    from repro.data.streaming import streaming_kmeans_blocks
+
+    x, y, _ = small
+    st = ArrayStore.from_arrays(str(tmp_path / "k"), x, y, shard_rows=317)
+    beta = np.asarray([0.05, 0.05, 5.0, 5.0])
+    a = streaming_kmeans_blocks(MemoryStore(x, y), beta, 30, seed=1,
+                                batch_rows=256)
+    b = streaming_kmeans_blocks(st, beta, 30, seed=1, batch_rows=256)
+    assert np.array_equal(a[0].labels, b[0].labels)
+    assert np.array_equal(a[0].order, b[0].order)
+    assert np.array_equal(a[0].centers, b[0].centers)
+    assert np.array_equal(a[1], b[1]) and a[2] == b[2]
+
+
+# -- fit parity ------------------------------------------------------------
+
+
+def test_streaming_fit_store_equals_incore(tmp_path, small):
+    """Disk-backed == RAM-backed, bit for bit (covers the spool round-trip
+    and the gather/remap packing)."""
+    x, y, _ = small
+    st = ArrayStore.from_arrays(str(tmp_path / "f"), x, y, shard_rows=412)
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    kw = dict(inner_steps=8, outer_rounds=2, stream_chunk=400)
+    r_disk = fit_sbv(st, None, cfg, **kw)
+    r_mem = fit_sbv(x, y, cfg, **kw)
+    assert _params_equal(r_disk.params, r_mem.params) == 0.0
+    assert [h[2] for h in r_disk.history] == [h[2] for h in r_mem.history]
+    assert r_disk.stream_stats["n_chunks"] > 1
+
+
+def test_chunked_fit_matches_monolithic_1e10(small):
+    """Chunked grad accumulation vs the single-chunk program: identical
+    structure (struct batch is decoupled from stream_chunk), so only the
+    float summation order differs."""
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    r_one = fit_sbv(x, y, cfg, inner_steps=10, outer_rounds=2,
+                    stream_chunk=100_000)
+    r_many = fit_sbv(x, y, cfg, inner_steps=10, outer_rounds=2,
+                     stream_chunk=300)
+    assert r_many.stream_stats["n_chunks"] > 3
+    assert _params_equal(r_one.params, r_many.params) <= 1e-10
+
+
+def test_bucketed_streaming_fit_matches_uniform(small):
+    """Per-chunk bucketed dispatch (docs/packing.md) rides the streaming
+    path unchanged: identity padding keeps per-block terms exact."""
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    r_u = fit_sbv(x, y, cfg, inner_steps=6, outer_rounds=1, stream_chunk=400)
+    r_b = fit_sbv(x, y, cfg, inner_steps=6, outer_rounds=1, stream_chunk=400,
+                  n_buckets=3)
+    assert _params_equal(r_u.params, r_b.params) <= 1e-10
+
+
+# -- predict parity --------------------------------------------------------
+
+
+def test_streaming_predict_store_equals_incore(tmp_path, small):
+    x, y, params = small
+    st = ArrayStore.from_arrays(str(tmp_path / "p"), x, y, shard_rows=412)
+    rng = np.random.default_rng(5)
+    xt = rng.uniform(size=(300, 4))
+    kw = dict(bs_pred=16, m_pred=48, n_sims=4, chunk_size=128,
+              stream_chunk=400, seed=0)
+    p_disk = predict_sbv(params, st, None, xt, **kw)
+    p_mem = predict_sbv(params, x, y, xt, **kw)
+    for f in ("mean", "var", "sim_mean", "ci_low", "ci_high"):
+        assert np.array_equal(getattr(p_disk, f), getattr(p_mem, f)), f
+    # Store-backed x_test rides the same chunk protocol.
+    st_t = ArrayStore.from_arrays(str(tmp_path / "pt"), xt, np.zeros(300),
+                                  shard_rows=90)
+    p_both = predict_sbv(params, st, None, st_t, **kw)
+    assert np.array_equal(p_both.mean, p_mem.mean)
+
+
+def test_streaming_predict_matches_exact_gp(small):
+    """m_pred >= n: every block conditions on the whole training set, so
+    the streaming index must reproduce the exact GP like the in-core path
+    does (the oracle test for the store-backed kNN + gather/remap)."""
+    from repro.core.exact_gp import exact_predict
+
+    x, y, params = small
+    x, y = x[:400], y[:400]
+    rng = np.random.default_rng(2)
+    xt = rng.uniform(size=(60, 4))
+    pred = predict_sbv(params, x, y, xt, bs_pred=8, m_pred=400, n_sims=2,
+                       stream_chunk=150, chunk_size=60)
+    em, ev = exact_predict(params, x, y, xt)
+    np.testing.assert_allclose(pred.mean, np.asarray(em), atol=1e-4, rtol=0)
+    np.testing.assert_allclose(pred.var, np.asarray(ev), atol=1e-4, rtol=0)
+
+
+def test_pipeline_store_producer_matches_sync(tmp_path, small):
+    """Serving pipeline with a store-backed test set: the producer thread
+    reads windows from disk; results must equal the in-core sync loop
+    bitwise (same chunk protocol underneath)."""
+    from repro.core.predict import build_train_index
+    from repro.serving import PipelineConfig, predict_pipelined, predict_synchronous
+
+    x, y, params = small
+    rng = np.random.default_rng(9)
+    xt = rng.uniform(size=(500, 4))
+    st_t = ArrayStore.from_arrays(str(tmp_path / "q"), xt, np.zeros(500),
+                                  shard_rows=128)
+    index = build_train_index(x, y, np.asarray(params.beta), 48, seed=0)
+    cfg = PipelineConfig(bs_pred=16, m_pred=48, chunk_size=160)
+    m_sync, v_sync = predict_synchronous(params, index, xt, cfg, seed=0)
+    m_disk, v_disk = predict_pipelined(params, index, st_t, cfg, seed=0)
+    assert np.array_equal(m_sync, m_disk) and np.array_equal(v_sync, v_disk)
+
+
+# -- bounded-memory smoke fit ---------------------------------------------
+
+
+def _vmrss_kb():
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1])
+    except OSError:
+        return None
+    return None
+
+
+@pytest.mark.slow
+def test_rss_bounded_200k_fit(tmp_path):
+    """200k-point store-backed smoke fit under a working-set RSS ceiling
+    derived from the run's own streaming state (the small sibling of
+    benchmarks/fig_streaming_scale.py's 1M gate)."""
+    if _vmrss_kb() is None:
+        pytest.skip("no /proc/self/status on this platform")
+    import threading
+
+    n, d, stream_chunk = 200_000, 16, 32_768
+    rng = np.random.default_rng(0)
+    with ArrayStore.create(str(tmp_path / "big"), d) as w:
+        for _ in range(n // 20_000):
+            xw = rng.uniform(size=(20_000, d))
+            yw = np.sin(3 * xw[:, 0]) + xw[:, 1] ** 2 + 0.05 * rng.standard_normal(20_000)
+            w.append(xw, yw)
+    st = ArrayStore(str(tmp_path / "big"))
+
+    peak = {"kb": _vmrss_kb()}
+    base_kb = peak["kb"]
+    stop = threading.Event()
+
+    def poll():
+        while not stop.is_set():
+            kb = _vmrss_kb()
+            if kb and kb > peak["kb"]:
+                peak["kb"] = kb
+            stop.wait(0.005)
+
+    th = threading.Thread(target=poll, daemon=True)
+    th.start()
+    try:
+        cfg = SBVConfig(n_blocks=n // 128, m=12, alpha=8.0, seed=0)
+        res = fit_sbv(st, None, cfg, inner_steps=2, outer_rounds=1,
+                      stream_chunk=stream_chunk)
+    finally:
+        stop.set()
+        th.join(timeout=5)
+
+    assert np.all(np.isfinite([h[2] for h in res.history]))
+    from repro.data.streaming import working_set_model
+
+    ws = working_set_model(res.stream_stats, n, d, cfg.m, stream_chunk,
+                           n_caches=1)  # fit only — no predict index here
+    budget = 2 * ws["total"]
+    incore = ws["incore_total"]
+    assert budget < incore, "ceiling must undercut the in-core footprint"
+    delta = (peak["kb"] - base_kb) * 1024
+    assert delta <= budget, (
+        f"peak RSS delta {delta / 2**20:.0f}MB exceeded the 2x working-set "
+        f"ceiling {budget / 2**20:.0f}MB (in-core would be ~{incore / 2**20:.0f}MB)"
+    )
+
+
+def test_working_set_model_terms(small):
+    """The RSS-gate model must stay tied to real run state: every term
+    positive, and the streaming budget strictly under the in-core cost
+    for the shapes the gates actually use."""
+    from repro.data.streaming import working_set_model
+
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    res = fit_sbv(x, y, cfg, inner_steps=2, outer_rounds=1, stream_chunk=300)
+    ws = working_set_model(res.stream_stats, len(y), 4, cfg.m, 300)
+    assert all(v > 0 for v in ws["terms"].values())
+    assert ws["total"] == sum(ws["terms"].values())

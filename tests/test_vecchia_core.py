@@ -1,12 +1,11 @@
 """Correctness of the Vecchia core: exactness identities, masking, KL."""
 import numpy as np
-import pytest
 import jax.numpy as jnp
 
 from repro.core import (
     KernelParams, SBVConfig, exact_loglik, kl_divergence, packed_loglik, preprocess,
 )
-from repro.core.blocks import BlockStructure, build_blocks, scale_inputs
+from repro.core.blocks import build_blocks, scale_inputs
 from repro.core.nns import brute_force_nns, filtered_nns
 from repro.core.packing import PackedBlocks, pack_blocks
 
