@@ -10,13 +10,21 @@ keeps it true:
 2. PARITY      — at 200k points, the store-backed ``fit_sbv`` +
    ``predict_sbv`` must match the in-core (RAM-resident arrays, same
    streaming code path) results to 1e-10. The IO layer must be invisible.
-3. SCALE       — the full ``--scale smoke`` 1M-point store-backed fit +
+3. TIERS       — the inner-loop memory-tier microbenchmark: one packed
+   round driven through many inner steps with the spool pinned to the
+   device-resident tier vs. pinned to the disk tier (the PR-4 loop:
+   re-read + blocking H2D per piece per step), plus the prefetched-H2D
+   middle tier. Reports steps/s and H2D bytes/step per mode and ASSERTS
+   the device-resident loop is >= 1.5x the disk loop with bitwise
+   parity — the speedup the regression gate then keeps.
+4. SCALE       — the full ``--scale smoke`` 1M-point store-backed fit +
    predict runs with the process peak-RSS DELTA asserted below
    ``2 x working_set``, where the working set is computed from the run's
    own streaming state (chunk windows + packed chunk on host and device +
-   index arrays + NNS gather cache). The same model shows the in-core
-   footprint the streaming path avoids; the budget must sit strictly
-   below it, otherwise the assertion would be vacuous.
+   device-resident spool tier + index arrays + NNS gather cache). The
+   same model shows the in-core footprint the streaming path avoids; the
+   budget must sit strictly below it, otherwise the assertion would be
+   vacuous.
 
 Peak RSS is measured by a 5ms /proc/self/status poll scoped to the
 fit+predict region (baseline captured at region start), so data
@@ -178,6 +186,73 @@ def parity_phase(workdir: str, n: int, seed: int, knobs: dict) -> dict:
             "parity_predict": float(d_pred)}
 
 
+def tier_phase(workdir: str, seed: int, knobs: dict) -> dict:
+    """Inner-loop memory tiers: device-cached vs prefetched vs disk-spool.
+
+    Shapes are chosen so the per-step cost is tier-dominated (many small
+    pieces: per-piece ``.npz`` decode + blocking H2D is the disk loop's
+    overhead) — this measures the residency win itself, not the Cholesky
+    throughput the scale phase already tracks. The jit cache is warmed
+    with a 1-step fit first so no timed mode pays compilation."""
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+
+    n, d = knobs["tier_n"], knobs["tier_d"]
+    store, _ = write_rff_store(os.path.join(workdir, f"tier{n}"), n, d, seed)
+    cfg = SBVConfig(n_blocks=max(1, n // knobs["tier_rows_per_block"]),
+                    m=knobs["tier_m"], alpha=knobs["alpha"], seed=seed)
+    kw = dict(outer_rounds=1, stream_chunk=knobs["tier_chunk"])
+    steps = knobs["tier_steps"]
+
+    fit_sbv(store, None, cfg, inner_steps=1, device_cache=0, prefetch=0, **kw)
+    r_disk = fit_sbv(store, None, cfg, inner_steps=steps, device_cache=0,
+                     prefetch=0, **kw)              # the PR-4 inner loop
+    r_pre = fit_sbv(store, None, cfg, inner_steps=steps, device_cache=0,
+                    prefetch=2, **kw)               # H2D pipeline, cold HBM
+    r_dev = fit_sbv(store, None, cfg, inner_steps=steps, **kw)  # auto budget
+
+    st = r_dev.stream_stats
+    assert st["device_cached_pieces"] == st["n_pieces"] > 1, (
+        "device budget did not hold the round — the tier compare would "
+        f"be vacuous ({st['device_cached_pieces']}/{st['n_pieces']} cached)"
+    )
+    parity = max(
+        abs(np.asarray(getattr(r_dev.params, f)) -
+            np.asarray(getattr(r_disk.params, f))).max()
+        for f in ("log_sigma2", "log_beta", "log_nugget")
+    )
+    assert parity == 0.0, f"memory tiers changed the fit: {parity}"
+
+    def steps_per_s(r):
+        return r.stream_stats["inner_steps_total"] / r.stream_stats["inner_time_s"]
+
+    sps_disk, sps_pre, sps_dev = map(steps_per_s, (r_disk, r_pre, r_dev))
+    speedup = sps_dev / sps_disk
+    out = {
+        "tier_n_pieces": st["n_pieces"],
+        "tier_steps_per_s_disk": sps_disk,
+        "tier_steps_per_s_prefetch": sps_pre,
+        "tier_steps_per_s_cached": sps_dev,
+        "tier_step_s_cached": 1.0 / sps_dev,
+        "tier_speedup": speedup,
+        "tier_parity": float(parity),
+        "tier_h2d_mb_per_step_disk":
+            r_disk.stream_stats["h2d_bytes_per_step"] / MB,
+        "tier_h2d_mb_per_step_cached": st["h2d_bytes_per_step"] / MB,
+        "tier_device_cached_mb": st["device_cached_bytes"] / MB,
+    }
+    print(f"[fig_streaming_scale] tiers@{n}: {st['n_pieces']} pieces, "
+          f"steps/s disk={sps_disk:.2f} prefetch={sps_pre:.2f} "
+          f"cached={sps_dev:.2f} -> speedup {speedup:.2f}x "
+          f"(H2D {out['tier_h2d_mb_per_step_disk']:.1f} -> "
+          f"{out['tier_h2d_mb_per_step_cached']:.1f} MB/step)")
+    assert speedup >= 1.5, (
+        f"device-resident inner loop only {speedup:.2f}x over the "
+        "disk-spool loop (acceptance floor is 1.5x)"
+    )
+    return out
+
+
 def scale_phase(workdir: str, n: int, seed: int, knobs: dict) -> dict:
     """The RSS-bounded big run: store-backed fit + predict, measured."""
     from repro.core.fit import fit_sbv
@@ -261,12 +336,16 @@ def main(argv=None):
         n_scale, n_parity = 1_000_000, 200_000
         knobs = dict(d=4, rows_per_block=128, m=16, alpha=8.0,
                      stream_chunk=131072, parity_steps=4, scale_steps=2,
-                     bs_pred=32, m_pred=32, n_test=8192)
+                     bs_pred=32, m_pred=32, n_test=8192,
+                     tier_n=20_000, tier_d=16, tier_rows_per_block=8,
+                     tier_m=4, tier_chunk=256, tier_steps=8)
     else:  # paper: the 50M respiratory-scale run (hours; real hardware)
         n_scale, n_parity = 50_000_000, 200_000
         knobs = dict(d=8, rows_per_block=256, m=60, alpha=16.0,
                      stream_chunk=524288, parity_steps=4, scale_steps=30,
-                     bs_pred=64, m_pred=120, n_test=100_000)
+                     bs_pred=64, m_pred=120, n_test=100_000,
+                     tier_n=200_000, tier_d=16, tier_rows_per_block=32,
+                     tier_m=8, tier_chunk=2048, tier_steps=20)
 
     calib = calibrate()
     workdir = args.workdir or tempfile.mkdtemp(prefix="sbv-streaming-")
@@ -274,6 +353,7 @@ def main(argv=None):
     try:
         if not args.skip_parity:
             payload.update(parity_phase(workdir, n_parity, args.seed, knobs))
+        payload.update(tier_phase(workdir, args.seed, knobs))
         payload.update(scale_phase(workdir, n_scale, args.seed, knobs))
     finally:
         if args.workdir is None:
@@ -284,7 +364,7 @@ def main(argv=None):
     table([payload],
           ["n", "t_fit_s", "t_predict_s", "peak_rss_delta_mb",
            "rss_budget_mb", "incore_estimate_mb", "parity_fit",
-           "parity_predict"],
+           "parity_predict", "tier_speedup", "tier_steps_per_s_cached"],
           title="streaming scale")
     save("fig_streaming_scale", payload)
     return payload

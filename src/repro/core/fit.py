@@ -12,7 +12,9 @@ cannot be differentiated through).
 """
 from __future__ import annotations
 
+import functools
 import os
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -46,11 +48,9 @@ def neg_loglik_fn(packed, nu: float, backend: str):
 _MAP_BATCH = 16  # blocks vmapped per lax.map step of the streaming grad
 
 
-def _chunk_grad_fn(nu: float, backend: str, n_points: int):
-    """jitted value_and_grad of one packed chunk's -loglik/n contribution.
-
-    All chunks of a structure round share one padded shape (see
-    ``_fit_sbv_streaming``), so this compiles once per round.
+def _chunk_loglik(nu: float, backend: str):
+    """Total loglik of one packed chunk — the body shared by the serial
+    and the shard_map'd streaming gradients.
 
     Device residency is the streaming fit's real memory ceiling: a
     vmapped value_and_grad over the whole chunk materializes O(10)
@@ -62,7 +62,7 @@ def _chunk_grad_fn(nu: float, backend: str, n_points: int):
     ``_MAP_BATCH x (bs+m)^2`` buffers however large the chunk is."""
     from .vecchia import _block_loglik_joint_one
 
-    def f(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
+    def ll(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
         if backend == "ref":
             body = jax.checkpoint(
                 lambda a: _block_loglik_joint_one(params, nu, *a)
@@ -71,47 +71,129 @@ def _chunk_grad_fn(nu: float, backend: str, n_points: int):
                 body, (blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask),
                 batch_size=_MAP_BATCH,
             )
-            ll = jnp.sum(per_block)
-        else:
-            from repro.kernels import ops as kops
+            return jnp.sum(per_block)
+        from repro.kernels import ops as kops
 
-            ll = kops.sbv_loglik(params, blk_x, blk_y, blk_mask,
-                                 nn_x, nn_y, nn_mask, nu=nu)
-        return -ll / n_points
+        return kops.sbv_loglik(params, blk_x, blk_y, blk_mask,
+                               nn_x, nn_y, nn_mask, nu=nu)
+
+    return ll
+
+
+@functools.lru_cache(maxsize=64)
+def _chunk_grad_fn(nu: float, backend: str, n_points: int, mesh=None,
+                   axis: str | None = None):
+    """jitted value_and_grad of one packed chunk's -loglik/n contribution.
+
+    CACHED on (nu, backend, n, mesh, axis) — the structure refresh of a
+    new outer round usually lands on the identical padded shapes, and a
+    fresh ``jax.jit`` wrapper would discard the compiled executable even
+    then. With the wrapper cached, per-shape compilation caching is
+    jit's own (one compile per piece shape across ALL rounds and fits).
+    The key includes the dataset size, so the cache is BOUNDED (a
+    long-lived process sweeping many dataset sizes would otherwise pin a
+    wrapper + executables per size forever); eviction just recompiles.
+
+    With ``mesh``/``axis``, the chunk's block axis is shard_map'd over
+    the mesh and the per-shard loglik is ``psum``'d before the global
+    ``-ll/n`` — O(1) scalars of communication per chunk per step, the
+    paper's Alg. 1 property — and the returned gradient is replicated,
+    so chunked accumulation proceeds exactly as in the serial loop. Pass
+    arrays already placed with ``NamedSharding(mesh, P(axis))`` on the
+    leading (block) axis (the spool's device tier and H2D stage both
+    do)."""
+    ll = _chunk_loglik(nu, backend)
+    if mesh is None:
+        def f(params, *arrs):
+            return -ll(params, *arrs) / n_points
+
+        return jax.jit(jax.value_and_grad(f))
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(axis)
+
+    def local(params, *arrs):
+        return jax.lax.psum(ll(params, *arrs), axis)
+
+    fn = shard_map(
+        local, mesh=mesh, in_specs=(P(),) + (spec,) * 6, out_specs=P(),
+        # pallas_call has no replication rule (same caveat as the
+        # prediction shard_map); the psum output is replicated anyway
+        check_rep=backend == "ref",
+    )
+
+    def f(params, *arrs):
+        return -fn(params, *arrs) / n_points
 
     return jax.jit(jax.value_and_grad(f))
 
 
+def _piece_backend(backend: str, piece) -> str:
+    """Resolve ``backend='auto'`` per spooled piece shape, exactly like the
+    bucketed in-core path (``kernels.ops.select_backend``)."""
+    if backend != "auto":
+        return backend
+    from repro.kernels import ops as kops
+
+    return kops.select_backend(piece.bs_max, piece.m, kind="loglik",
+                               dtype=piece.blk_x.dtype)
+
+
 def _fit_sbv_streaming(
     store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
-    stream_chunk, n_buckets, spool_dir,
+    stream_chunk, n_buckets, spool_dir, distributed=None,
+    device_cache: int | None = None, prefetch: int = 2,
 ):
     """Out-of-core fit: every pass holds ~``stream_chunk`` data rows.
 
     Per outer round: streaming structure (mini-batch k-means + store-backed
     filtered NNS), then the rank-ordered blocks are packed into
     ``stream_chunk``-row chunks (gather-and-remap from the store), padded
-    to ONE shared shape, and spooled to disk. Each inner step accumulates
-    value+grad over the spooled chunks — the likelihood is a sum over
-    blocks, so chunked accumulation differs from the monolithic in-core
-    program only in float summation order (pinned <= 1e-10 in
-    tests/test_streaming.py).
+    to ONE shared shape, and handed to the two-tier ``PackedChunkSpool``.
+    Each inner step accumulates value+grad over the pieces IN SPOOL
+    ORDER — the likelihood is a sum over blocks, so chunked accumulation
+    differs from the monolithic in-core program only in float summation
+    order (pinned <= 1e-10 in tests/test_streaming.py), and the memory
+    tier a piece lives in (HBM cache / prefetched H2D / cold disk)
+    changes nothing bitwise.
+
+    ``device_cache``: bytes of HBM for the device-resident tier — pieces
+    within the budget are transferred once per round instead of once per
+    step. ``None`` sizes it automatically from free device memory minus
+    the gradient's live-set reserve; ``0`` disables (every piece re-reads
+    from disk, the pre-tier behavior). ``prefetch``: disk-tier pieces
+    staged ahead on a producer thread (0 = synchronous reads).
+
+    ``distributed=(mesh, axis)`` shards every piece's block axis over the
+    mesh (owner-contiguous, masked padding to the shard count) and runs
+    the chunk gradient under ``shard_map`` with a scalar ``psum`` — the
+    streaming twin of the in-core distributed likelihood. The block
+    reorder changes only the summation order vs. the serial streaming
+    fit (<= 1e-8 over an optimization run).
     """
     import shutil
     import tempfile
 
     from repro.data.streaming import (
-        pack_block_chunk, PackedChunkSpool, streaming_moments,
-        streaming_preprocess,
+        device_cache_budget, pack_block_chunk, PackedChunkSpool,
+        streaming_moments, streaming_preprocess,
     )
 
     from .packing import round_up
 
-    if backend == "auto":
-        raise ValueError(
-            "backend='auto' resolves per packed shape; pass 'ref' or "
-            "'pallas' explicitly for the streaming fit"
-        )
+    mesh = axis = sharding = None
+    n_shards = 1
+    if distributed is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from .distributed import shard_blocks_by_owner
+
+        mesh, axis = distributed
+        n_shards = int(np.prod([mesh.shape[a] for a in
+                                (axis if isinstance(axis, tuple) else (axis,))]))
+        sharding = NamedSharding(mesh, P(axis))
     n = store.n_rows
     d = store.d
     if init is None:
@@ -121,12 +203,19 @@ def _fit_sbv_streaming(
         params = init
     history = []
     stats = {"n_chunks": 0, "n_pieces": 0, "packed_chunk_bytes_max": 0,
-             "spool_bytes": 0, "bs_max": 0, "bc": 0}
+             "spool_bytes": 0, "bs_max": 0, "bc": 0, "n_shards": n_shards,
+             "device_cached_pieces": 0, "device_cached_bytes": 0,
+             "h2d_bytes_per_step": 0, "inner_steps_total": 0,
+             "inner_time_s": 0.0}
 
     for outer in range(outer_rounds):
         beta_np = np.asarray(params.beta)
         struct = streaming_preprocess(store, beta_np, cfg, stream_chunk)
         bc_pad = max(len(r) for r in struct.plan)
+        if n_shards > 1:
+            # every piece's block count must divide the shard count; pad
+            # the SHARED shape so all pieces still hit one compiled program
+            bc_pad = round_up(bc_pad, n_shards)
 
         if n_buckets:
             # GLOBAL bucket ceilings + per-cell bc padding: every chunk's
@@ -148,9 +237,19 @@ def _fit_sbv_streaming(
                     # Same clamp bucket_blocks applies to piece shapes.
                     key = (min(bs_c, struct.bs_max), min(m_c, cfg.m))
                     cell_bc[key] = max(cell_bc.get(key, 0), round_up(idx.size, 8))
+            if n_shards > 1:
+                cell_bc = {k: round_up(v, n_shards) for k, v in cell_bc.items()}
 
+        if device_cache is None:
+            # Auto budget: free device memory minus the grad live-set
+            # reserve (the working_set_model device_grad term).
+            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * 8
+            budget = device_cache_budget(reserve_bytes=reserve)
+        else:
+            budget = int(device_cache)
         work_dir = spool_dir or tempfile.mkdtemp(prefix="sbv-spool-")
-        spool = PackedChunkSpool(os.path.join(work_dir, f"round{outer}"))
+        spool = PackedChunkSpool(os.path.join(work_dir, f"round{outer}"),
+                                 device_budget=budget, sharding=sharding)
         try:
             for ranks in struct.plan:
                 packed = pack_block_chunk(
@@ -171,34 +270,44 @@ def _fit_sbv_streaming(
                 else:
                     pieces = [packed.pad_to_blocks(bc_pad)]
                 for p in pieces:
-                    spool.add(p)
+                    if n_shards > 1:
+                        # owner-contiguous reorder; bc already divides the
+                        # shard count, so the shape is unchanged
+                        p = shard_blocks_by_owner(p, n_shards)
+                    spool.add(p, tag=_piece_backend(backend, p))
             stats.update(
                 n_chunks=len(struct.plan), n_pieces=len(spool),
                 packed_chunk_bytes_max=max(stats["packed_chunk_bytes_max"],
                                            spool.packed_bytes_max),
                 spool_bytes=max(stats["spool_bytes"], spool.packed_bytes_total),
                 bs_max=struct.bs_max, bc=struct.blocks.n_blocks,
+                # last-round values, consistent with n_pieces/n_chunks ...
+                device_cached_pieces=spool.n_device,
+                h2d_bytes_per_step=spool.disk_bytes_total,
+                # ... except the cached-bytes PEAK across rounds, which is
+                # what the working_set_model RSS ceiling has to cover
+                device_cached_bytes=max(stats["device_cached_bytes"],
+                                        spool.device_bytes),
             )
 
-            grad_fn = _chunk_grad_fn(nu, backend, n)
             state = adam_init(params)
+            t_inner = time.perf_counter()
             for it in range(inner_steps):
                 loss = None
                 grad = None
-                for piece in spool:
-                    v, g = grad_fn(
-                        params,
-                        jnp.asarray(piece.blk_x), jnp.asarray(piece.blk_y),
-                        jnp.asarray(piece.blk_mask), jnp.asarray(piece.nn_x),
-                        jnp.asarray(piece.nn_y), jnp.asarray(piece.nn_mask),
-                    )
+                for arrs, piece_backend in spool.iter_arrays(prefetch=prefetch):
+                    grad_fn = _chunk_grad_fn(nu, piece_backend, n, mesh, axis)
+                    v, g = grad_fn(params, *arrs)
                     loss = v if loss is None else loss + v
                     grad = g if grad is None else jax.tree.map(jnp.add, grad, g)
                 params, state = adam_update(grad, state, params, lr)
                 history.append((outer, it, float(loss)))
                 if verbose and it % 10 == 0:
                     print(f"[fit-stream] outer={outer} it={it} "
-                          f"nll/n={float(loss):.6f} pieces={len(spool)}")
+                          f"nll/n={float(loss):.6f} pieces={len(spool)} "
+                          f"(device-cached {spool.n_device})")
+            stats["inner_time_s"] += time.perf_counter() - t_inner
+            stats["inner_steps_total"] += inner_steps
         finally:
             spool.cleanup()
             if spool_dir is None:
@@ -222,6 +331,8 @@ def fit_sbv(
     n_buckets: int | None = None,
     stream_chunk: int | None = None,
     spool_dir: str | None = None,
+    device_cache: int | None = None,
+    prefetch: int = 2,
 ) -> FitResult:
     """Maximum-likelihood fit of (sigma^2, beta, nugget) with fixed nu.
 
@@ -238,23 +349,26 @@ def fit_sbv(
     in-core ``(x, y)`` with ``stream_chunk`` set takes the identical code
     path over a ``MemoryStore``, so store-backed and in-core streaming
     fits agree bitwise on the same rows. In-core arrays WITHOUT
-    ``stream_chunk`` keep the original monolithic fast path."""
+    ``stream_chunk`` keep the original monolithic fast path.
+    ``device_cache`` (bytes; None = auto, 0 = off) and ``prefetch``
+    control the streaming inner loop's memory tiers — see
+    ``_fit_sbv_streaming`` and docs/streaming.md. ``distributed=`` works
+    with BOTH paths: in-core it shards the monolithic packed likelihood;
+    streaming it shards every spooled piece (the 2.56B-point scaling
+    configuration)."""
     from repro.data.store import as_store, is_store
 
     if cfg is None:
         raise TypeError("fit_sbv requires an SBVConfig")
     if is_store(x) or stream_chunk is not None:
-        if distributed is not None:
-            raise NotImplementedError(
-                "streaming + distributed likelihood is not wired yet; "
-                "fit in-core for multi-device runs (ROADMAP open item)"
-            )
         from repro.data.streaming import DEFAULT_STRUCT_BATCH
 
         store = as_store(x, y)
         return _fit_sbv_streaming(
             store, cfg, init, nu, lr, inner_steps, outer_rounds, backend,
             verbose, stream_chunk or DEFAULT_STRUCT_BATCH, n_buckets, spool_dir,
+            distributed=distributed, device_cache=device_cache,
+            prefetch=prefetch,
         )
     d = x.shape[1]
     params = init or KernelParams.create(sigma2=float(np.var(y)), beta=0.5, nugget=1e-3, d=d)

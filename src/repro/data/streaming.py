@@ -384,54 +384,159 @@ def pack_block_chunk(
     return pack_blocks(xg, yg, mini, neigh_local, m, bs_max=bs_max, dtype=dtype)
 
 
+_SPOOL_KEYS = ("blk_x", "blk_y", "blk_mask", "nn_x", "nn_y", "nn_mask")
+
+
+def _host_available_bytes() -> int | None:
+    """MemAvailable from /proc/meminfo (the CPU backend's 'free HBM')."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemAvailable:"):
+                    return int(line.split()[1]) * 1024
+    except (OSError, ValueError, IndexError):
+        pass
+    return None
+
+
+def device_cache_budget(frac: float = 0.5, reserve_bytes: int = 0) -> int:
+    """Byte budget for the device-resident spool tier.
+
+    ``frac`` of the accelerator's free memory (``Device.memory_stats`` —
+    GPU/TPU report ``bytes_limit``/``bytes_in_use``) minus
+    ``reserve_bytes``, the headroom the caller needs for compute (the
+    streaming fit passes its ``working_set_model`` device-grad term so
+    the cache can never squeeze out the backward pass's live set). On the
+    CPU backend, device memory IS host RAM, so MemAvailable stands in;
+    when neither source is readable, a conservative 4GB is assumed.
+    """
+    import jax
+
+    free = None
+    dev = jax.devices()[0]
+    try:
+        stats = dev.memory_stats()
+    except Exception:
+        stats = None
+    if stats and stats.get("bytes_limit"):
+        free = int(stats["bytes_limit"]) - int(stats.get("bytes_in_use", 0))
+    if free is None:
+        free = _host_available_bytes() or (4 << 30)
+    return max(0, int(frac * free) - int(reserve_bytes))
+
+
 class PackedChunkSpool:
-    """On-disk cache of packed chunk pieces for one structure round.
+    """Two-tier cache of packed chunk pieces for one structure round.
 
     The likelihood inner loop re-reads every piece once per optimizer
-    step; spooling to uncompressed ``.npz`` keeps the resident set at one
-    piece while the page cache absorbs the re-read traffic. float64
-    round-trips bit-exactly, so spooling never perturbs the fit.
+    step, so WHERE the pieces wait between steps is the streaming fit's
+    hot-path bandwidth question:
+
+    * **device tier** — pieces added while cumulative bytes fit
+      ``device_budget`` are transferred ONCE (``device_put``, optionally
+      with a ``sharding`` for the distributed fit) and stay resident
+      across every inner step of the round; re-reads cost nothing.
+    * **disk tier** — overflow pieces spool to uncompressed ``.npz`` as
+      before (float64 round-trips bit-exactly, so spooling never
+      perturbs the fit) and are re-staged per step; ``iter_arrays``
+      hides that behind compute with a ``Prefetcher`` H2D pipeline.
+
+    Iteration order is ALWAYS add order regardless of tier, so the grad
+    accumulation order — and therefore the fit, bitwise — is identical
+    whether a piece sat in HBM, behind the prefetcher, or on cold disk
+    (pinned in tests/test_streaming.py).
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, device_budget: int = 0, sharding=None):
         self.path = path
-        os.makedirs(path, exist_ok=True)
-        self._files: list[str] = []
+        self.device_budget = int(device_budget)
+        self.sharding = sharding
+        # entries: (kind, payload, tag, nbytes); payload is a tuple of
+        # device arrays ("dev") or an .npz path ("disk"); ``tag`` is an
+        # opaque caller label (the fit stores the resolved backend).
+        self._entries: list[tuple] = []
+        self._made_dir = False
         self.packed_bytes_max = 0
         self.packed_bytes_total = 0
+        self.device_bytes = 0
+        self.disk_bytes_total = 0
 
     def __len__(self) -> int:
-        return len(self._files)
+        return len(self._entries)
 
-    def add(self, packed: PackedBlocks) -> None:
-        f = os.path.join(self.path, f"chunk_{len(self._files):05d}.npz")
-        np.savez(f, blk_x=packed.blk_x, blk_y=packed.blk_y,
-                 blk_mask=packed.blk_mask, nn_x=packed.nn_x,
-                 nn_y=packed.nn_y, nn_mask=packed.nn_mask,
-                 owners=packed.owners)
-        nbytes = sum(a.nbytes for a in (packed.blk_x, packed.blk_y,
-                                        packed.blk_mask, packed.nn_x,
-                                        packed.nn_y, packed.nn_mask))
+    @property
+    def n_device(self) -> int:
+        return sum(1 for e in self._entries if e[0] == "dev")
+
+    @property
+    def n_disk(self) -> int:
+        return len(self) - self.n_device
+
+    def _put_device(self, a: np.ndarray):
+        import jax
+        import jax.numpy as jnp
+
+        if self.sharding is not None:
+            return jax.device_put(a, self.sharding)
+        return jnp.asarray(a)
+
+    def add(self, packed: PackedBlocks, tag=None) -> None:
+        arrs = tuple(getattr(packed, k) for k in _SPOOL_KEYS)
+        nbytes = sum(a.nbytes for a in arrs)
         self.packed_bytes_max = max(self.packed_bytes_max, nbytes)
         self.packed_bytes_total += nbytes
-        self._files.append(f)
+        if self.device_bytes + nbytes <= self.device_budget:
+            dev = tuple(self._put_device(a) for a in arrs)
+            self._entries.append(("dev", dev, tag, nbytes))
+            self.device_bytes += nbytes
+            return
+        if not self._made_dir:
+            os.makedirs(self.path, exist_ok=True)
+            self._made_dir = True
+        f = os.path.join(self.path, f"chunk_{len(self._entries):05d}.npz")
+        np.savez(f, owners=packed.owners,
+                 **{k: a for k, a in zip(_SPOOL_KEYS, arrs)})
+        self._entries.append(("disk", f, tag, nbytes))
+        self.disk_bytes_total += nbytes
 
-    def __iter__(self):
-        for f in self._files:
-            with np.load(f) as z:
-                yield PackedBlocks(
-                    blk_x=z["blk_x"], blk_y=z["blk_y"], blk_mask=z["blk_mask"],
-                    nn_x=z["nn_x"], nn_y=z["nn_y"], nn_mask=z["nn_mask"],
-                    owners=z["owners"],
-                )
+    def _stage(self, entry):
+        """(device-array tuple, tag) for one entry — the H2D hot path.
+
+        Disk entries are read and transferred here; running this on the
+        Prefetcher's producer thread is what hides disk+transfer time
+        behind the consumer's compute."""
+        kind, payload, tag, _nb = entry
+        if kind == "dev":
+            return payload, tag
+        with np.load(payload) as z:
+            return tuple(self._put_device(z[k]) for k in _SPOOL_KEYS), tag
+
+    def iter_arrays(self, prefetch: int = 2):
+        """Yield ``(arrays, tag)`` per piece, in add order.
+
+        With ``prefetch > 0`` and disk-tier pieces present, staging runs
+        on a producer thread ``prefetch`` items ahead (2 = double
+        buffer): the host reads and transfers piece k+1 while the device
+        computes on piece k. ``prefetch=0`` is the synchronous loop —
+        bitwise identical output, serial staging."""
+        if prefetch > 0 and self.n_disk:
+            from repro.prefetch import Prefetcher
+
+            with Prefetcher(iter(self._entries), depth=prefetch,
+                            stage=self._stage, name="sbv-h2d") as staged:
+                yield from staged
+        else:
+            for entry in self._entries:
+                yield self._stage(entry)
 
     def cleanup(self) -> None:
-        for f in self._files:
-            try:
-                os.remove(f)
-            except OSError:
-                pass
-        self._files = []
+        for kind, payload, *_ in self._entries:
+            if kind == "disk":
+                try:
+                    os.remove(payload)
+                except OSError:
+                    pass
+        self._entries = []  # drops the device-tier references too
         try:
             os.rmdir(self.path)
         except OSError:
@@ -498,7 +603,11 @@ def working_set_model(stream_stats: dict, n_rows: int, d: int, m: int,
       beta in higher d the coarse filter can admit most blocks for one
       query, so the transient is O(n x d) (concat + squared distances);
     * index arrays  — labels/members/flat_idx/flat_rank + neighbor lists;
-    * gather caches — the LRU block-point caches (fit and predict index).
+    * gather caches — the LRU block-point caches (fit and predict index);
+    * device spool  — the device-resident spool tier (docs/streaming.md
+      "inner-loop memory tiers"): on the CPU backend device arrays ARE
+      host RSS, so cached pieces count double (buffer + transfer
+      transient). Only present when the run actually cached pieces.
 
     The same constants applied to the WHOLE dataset give
     ``incore_total``: what the monolithic path would hold resident. The
@@ -517,6 +626,8 @@ def working_set_model(stream_stats: dict, n_rows: int, d: int, m: int,
         "index_arrays": 4 * n_rows * 8 + st["bc"] * m * 8,
         "gather_caches": n_caches * (32 << 20),
     }
+    if st.get("device_cached_bytes"):
+        terms["device_spool"] = 2 * st["device_cached_bytes"]
     total = sum(terms.values())
     incore_total = (
         2 * n_rows * (d + 1) * 8      # raw + scaled arrays resident

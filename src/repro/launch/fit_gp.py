@@ -51,7 +51,8 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--inner-steps", type=int, default=40)
     ap.add_argument("--outer-rounds", type=int, default=2)
-    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
+    ap.add_argument("--backend", default="ref",
+                    choices=["ref", "pallas", "auto"])
     ap.add_argument("--test-frac", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--store", default=None, metavar="DIR",
@@ -63,6 +64,13 @@ def main(argv=None):
     ap.add_argument("--stream-chunk", type=int, default=None,
                     help="max dataset rows held on host per streaming pass "
                          "(implies the out-of-core fit path)")
+    ap.add_argument("--device-cache-mb", type=float, default=None,
+                    help="HBM budget (MB) for the streaming fit's "
+                         "device-resident spool tier; default sizes it from "
+                         "free device memory, 0 disables the cache")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="disk-tier spool pieces staged ahead of the device "
+                         "by the H2D producer thread (0 = synchronous reads)")
     args = ap.parse_args(argv)
 
     store = None
@@ -112,17 +120,30 @@ def main(argv=None):
             rng.choice(store.n_rows, size=n_test, replace=False))
         y_te_c = y_te  # streaming path fits the raw observations
         mu_y = 0.0
-        cfg = SBVConfig(n_blocks=args.blocks, m=args.m, seed=args.seed)
+        cfg = SBVConfig(n_blocks=args.blocks, m=args.m,
+                        n_workers=args.workers, seed=args.seed)
+        distributed = None
+        if args.workers > 1:
+            from repro.launch.mesh import make_worker_mesh
+
+            distributed = (make_worker_mesh(args.workers), "workers")
+        device_cache = (None if args.device_cache_mb is None
+                        else int(args.device_cache_mb * 2**20))
 
         t0 = time.time()
         res = fit_sbv(store, None, cfg, inner_steps=args.inner_steps,
                       outer_rounds=args.outer_rounds, backend=args.backend,
-                      stream_chunk=args.stream_chunk, verbose=True)
+                      stream_chunk=args.stream_chunk, verbose=True,
+                      distributed=distributed, device_cache=device_cache,
+                      prefetch=args.prefetch)
         t_fit = time.time() - t0
         beta = np.asarray(res.params.beta)
+        st = res.stream_stats
         print(f"[fit_gp] streaming fit {store.n_rows} pts in {t_fit:.1f}s "
-              f"({res.stream_stats['n_chunks']} chunks/round); "
-              f"sigma2={float(res.params.sigma2):.4f}")
+              f"({st['n_chunks']} chunks/round, "
+              f"{st['device_cached_pieces']}/{st['n_pieces']} pieces "
+              f"device-cached, {st['h2d_bytes_per_step'] / 2**20:.1f}MB "
+              f"H2D/step); sigma2={float(res.params.sigma2):.4f}")
         print("[fit_gp] relevance 1/beta:", np.round(1.0 / beta, 3))
 
         t0 = time.time()

@@ -19,11 +19,13 @@ Steady state: packing cost and scatter cost disappear behind device
 compute; per-chunk wall time approaches max(pack, compute) instead of
 pack + compute. Results are BITWISE identical to the synchronous loop
 (same ``iter_query_chunks`` protocol, same jitted program, same scatter).
+
+The producer-thread machinery itself lives in ``repro.prefetch``
+(``Prefetcher``) — it is shared with the streaming fit's H2D spool
+reader, so both overlap paths run one tested implementation.
 """
 from __future__ import annotations
 
-import queue
-import threading
 from dataclasses import dataclass
 
 import numpy as np
@@ -32,6 +34,7 @@ from repro.core.kernels_math import KernelParams
 from repro.core.predict import (
     TrainIndex, iter_query_chunks, packed_predict, scatter_packed,
 )
+from repro.prefetch import Prefetcher
 
 from .telemetry import ServerStats
 
@@ -192,41 +195,13 @@ def predict_pipelined(
 
     split = make_chunk_split(cfg)
     compute = make_chunk_compute(params, cfg, mesh)
-    q: queue.Queue = queue.Queue(maxsize=max(1, cfg.prefetch))
-    stop = threading.Event()  # consumer died early — unblock the producer
-    _DONE = object()
-
-    def put_or_stop(item) -> bool:
-        while not stop.is_set():
-            try:
-                q.put(item, timeout=0.1)
-                return True
-            except queue.Full:
-                continue
-        return False
-
-    def producer():
-        try:
-            for _, packed in _chunks(index, x_test, cfg, seed):
-                # bucket split is host numpy — keep it off the consumer's
-                # critical path, same as the rest of packing
-                if not put_or_stop(split(packed)):
-                    return
-            put_or_stop(_DONE)
-        except BaseException as exc:  # surface packing errors to the consumer
-            put_or_stop(exc)
-
-    th = threading.Thread(target=producer, name="sbv-packer", daemon=True)
-    th.start()
 
     inflight = None  # [(piece, mu_dev, var_dev), ...] — dispatched, not forced
-    try:
-        while True:
-            item = q.get()
-            if item is _DONE:
-                break
-            if isinstance(item, BaseException):
-                raise item
+    # The bucket split is host numpy — the stage fn keeps it off the
+    # consumer's critical path, same as the rest of packing.
+    with Prefetcher(_chunks(index, x_test, cfg, seed), depth=cfg.prefetch,
+                    stage=lambda kv: split(kv[1]), name="sbv-packer") as staged:
+        for item in staged:
             pieces = compute(item)   # async dispatch, returns early
             _record_pieces(stats, pieces)
             if inflight is not None:
@@ -236,7 +211,4 @@ def predict_pipelined(
         if inflight is not None:
             for p_prev, mu_prev, vr_prev in inflight:
                 scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
-    finally:
-        stop.set()
-        th.join(timeout=10.0)
     return mean, var

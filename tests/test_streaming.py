@@ -5,12 +5,19 @@ math. A disk-backed ``ArrayStore`` and an in-RAM ``MemoryStore`` holding
 the same rows must produce bit-identical structures, fits and
 predictions (the IO layer adds zero numerical change), and the chunked
 likelihood dispatch must match the monolithic in-core program to 1e-10
-(only float summation ORDER differs). Plus: store round-trip/manifest
+(only float summation ORDER differs). The same invisibility extends to
+the inner-loop memory TIERS: a piece served from the device-resident
+spool cache, through the prefetched H2D pipeline, or from cold disk
+must produce the identical fit bitwise. Plus: store round-trip/manifest
 integrity, chunk-iterator boundary cases, single-batch mini-batch
-k-means == Lloyd, and a bounded-RSS 200k-point smoke fit.
+k-means == Lloyd, a bounded-RSS 200k-point smoke fit, and the
+subprocess 8-device distributed streaming fit.
 """
 import json
 import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -208,6 +215,171 @@ def test_bucketed_streaming_fit_matches_uniform(small):
     r_b = fit_sbv(x, y, cfg, inner_steps=6, outer_rounds=1, stream_chunk=400,
                   n_buckets=3)
     assert _params_equal(r_u.params, r_b.params) <= 1e-10
+
+
+# -- inner-loop memory tiers (device cache / prefetch / disk) --------------
+
+
+def test_device_cache_matches_disk_spool_bitwise(small):
+    """Pieces held in the device-resident spool tier across all inner
+    steps must produce the identical fit to pieces re-read from the disk
+    spool every step — the tier is pure residency, zero numerics."""
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    kw = dict(inner_steps=6, outer_rounds=2, stream_chunk=300)
+    r_dev = fit_sbv(x, y, cfg, device_cache=1 << 30, prefetch=0, **kw)
+    r_disk = fit_sbv(x, y, cfg, device_cache=0, prefetch=0, **kw)
+    st_dev, st_disk = r_dev.stream_stats, r_disk.stream_stats
+    assert st_dev["n_pieces"] > 1
+    assert st_dev["device_cached_pieces"] == st_dev["n_pieces"]
+    assert st_dev["h2d_bytes_per_step"] == 0
+    assert st_disk["device_cached_pieces"] == 0
+    assert st_disk["h2d_bytes_per_step"] > 0
+    assert _params_equal(r_dev.params, r_disk.params) == 0.0
+    assert [h[2] for h in r_dev.history] == [h[2] for h in r_disk.history]
+
+
+def test_prefetched_pipeline_matches_sync_bitwise(small):
+    """The H2D producer thread stages disk pieces ahead of the device but
+    preserves accumulation order — prefetched == synchronous, bitwise."""
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    kw = dict(inner_steps=6, outer_rounds=2, stream_chunk=300, device_cache=0)
+    r_pre = fit_sbv(x, y, cfg, prefetch=2, **kw)
+    r_sync = fit_sbv(x, y, cfg, prefetch=0, **kw)
+    assert r_pre.stream_stats["n_pieces"] > 1
+    assert _params_equal(r_pre.params, r_sync.params) == 0.0
+    assert [h[2] for h in r_pre.history] == [h[2] for h in r_sync.history]
+
+
+def test_mixed_tier_spool_matches_disk_bitwise(small):
+    """A budget that fits only part of the round: leading pieces stay on
+    device, the overflow spools to disk — same fit, bitwise."""
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=24, m=20, seed=0)
+    kw = dict(inner_steps=4, outer_rounds=1, stream_chunk=300)
+    probe = fit_sbv(x, y, cfg, inner_steps=1, outer_rounds=1,
+                    stream_chunk=300, device_cache=0)
+    budget = probe.stream_stats["spool_bytes"] // 2
+    r_mix = fit_sbv(x, y, cfg, device_cache=budget, **kw)
+    r_disk = fit_sbv(x, y, cfg, device_cache=0, **kw)
+    st = r_mix.stream_stats
+    assert 0 < st["device_cached_pieces"] < st["n_pieces"]
+    assert 0 < st["h2d_bytes_per_step"] < st["spool_bytes"]
+    assert _params_equal(r_mix.params, r_disk.params) == 0.0
+
+
+def test_streaming_auto_backend_resolves(small):
+    """backend='auto' no longer raises: each spooled piece resolves
+    through kernels.ops.select_backend; at these small shapes that is
+    'ref', so the fit must match the explicit-ref fit bitwise."""
+    from repro.kernels.ops import select_backend
+
+    x, y, _ = small
+    cfg = SBVConfig(n_blocks=48, m=10, seed=0)
+    kw = dict(inner_steps=4, outer_rounds=1, stream_chunk=300)
+    r_auto = fit_sbv(x, y, cfg, backend="auto", **kw)
+    r_ref = fit_sbv(x, y, cfg, backend="ref", **kw)
+    bs_max = r_auto.stream_stats["bs_max"]
+    assert select_backend(bs_max, cfg.m, kind="loglik") == "ref"
+    assert _params_equal(r_auto.params, r_ref.params) == 0.0
+
+
+def test_chunk_grad_fn_cached_across_rounds():
+    """The jitted chunk-grad wrapper is shared across outer rounds (and
+    fits): same key -> same wrapper object -> one jit compile cache."""
+    from repro.core.fit import _chunk_grad_fn
+
+    assert _chunk_grad_fn(3.5, "ref", 1234) is _chunk_grad_fn(3.5, "ref", 1234)
+    assert _chunk_grad_fn(3.5, "ref", 1234) is not _chunk_grad_fn(3.5, "ref", 999)
+    assert _chunk_grad_fn(3.5, "ref", 1234) is not _chunk_grad_fn(3.5, "pallas", 1234)
+
+
+def test_prefetcher_propagates_errors_and_closes():
+    """The shared double-buffer primitive surfaces producer exceptions in
+    the consumer and joins its thread on early exit."""
+    import threading
+
+    from repro.prefetch import Prefetcher
+
+    def boom():
+        yield 1
+        raise RuntimeError("producer failed")
+
+    with Prefetcher(boom(), depth=1) as pf:
+        it = iter(pf)
+        assert next(it) == 1
+        with pytest.raises(RuntimeError, match="producer failed"):
+            next(it)
+
+    # early close unblocks a producer stuck on a full queue
+    pf = Prefetcher(iter(range(100)), depth=1, stage=lambda i: i * 2)
+    got = [next(iter(pf))]
+    pf.close()
+    assert got == [0]
+    assert not any(t.name == "prefetch" and t.is_alive()
+                   for t in threading.enumerate())
+
+
+# -- distributed streaming (subprocess, 8 virtual devices) -----------------
+
+
+STREAM_DIST_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+    from repro.data.gp_sim import paper_synthetic
+
+    assert jax.device_count() == 8, jax.device_count()
+    mesh = jax.make_mesh((8,), ("workers",))
+
+    x, y, _ = paper_synthetic(seed=0, n=600, d=4)
+    cfg = SBVConfig(n_blocks=24, m=16, n_workers=8, seed=0)
+    kw = dict(inner_steps=8, outer_rounds=2, stream_chunk=200)
+
+    def dparams(a, b):
+        return max(np.abs(np.asarray(getattr(a.params, f)) -
+                          np.asarray(getattr(b.params, f))).max()
+                   for f in ("log_sigma2", "log_beta", "log_nugget"))
+
+    r_ser = fit_sbv(x, y, cfg, **kw)
+    r_dist = fit_sbv(x, y, cfg, distributed=(mesh, "workers"), **kw)
+    d = dparams(r_ser, r_dist)
+    assert d <= 1e-8, d
+    assert r_dist.stream_stats["n_shards"] == 8
+    assert r_dist.stream_stats["n_pieces"] > 1
+
+    # the H2D pipeline stages sharded pieces too: disk tier + prefetch
+    # under the mesh == device-cached under the mesh, bitwise
+    r_disk = fit_sbv(x, y, cfg, distributed=(mesh, "workers"),
+                     device_cache=0, prefetch=2, **kw)
+    assert dparams(r_dist, r_disk) == 0.0
+
+    losses = [h[2] for h in r_dist.history]
+    assert losses[-1] < losses[0], losses
+    print("STREAM_DIST_OK", d)
+    """
+)
+
+
+def test_distributed_streaming_fit_matches_serial():
+    """fit_sbv(stream_chunk=..., distributed=(mesh, axis)) on an 8-device
+    mesh matches the serial streaming fit (same harness as
+    tests/test_distributed_gp.py — the main process must keep 1 device)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", STREAM_DIST_SCRIPT], capture_output=True,
+        text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "STREAM_DIST_OK" in r.stdout
 
 
 # -- predict parity --------------------------------------------------------
