@@ -48,63 +48,9 @@ from benchmarks.common import calibrate, parser, save, table
 MB = 1024 * 1024
 
 
-# -- /proc-based peak-RSS accounting --------------------------------------
-
-
-def _status_kb(field: str) -> int | None:
-    try:
-        with open("/proc/self/status") as f:
-            for line in f:
-                if line.startswith(field + ":"):
-                    return int(line.split()[1])
-    except OSError:
-        return None
-    return None
-
-
-class PeakRssSampler:
-    """Track peak VmRSS over a region by polling /proc/self/status.
-
-    VmHWM + clear_refs would be exact, but clear_refs is often denied in
-    containers; a 5ms poll reliably catches the sustained allocations a
-    working-set ceiling is about (chunk windows, packed arrays, device
-    buffers), everywhere /proc exists. ``peak_delta_bytes`` is peak minus
-    the baseline captured at ``start()``.
-    """
-
-    def __init__(self, interval_s: float = 0.005):
-        import threading
-
-        self._interval = interval_s
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self.baseline_kb = None
-        self.peak_kb = None
-
-    def _run(self):
-        while not self._stop.is_set():
-            kb = _status_kb("VmRSS")
-            if kb is not None and (self.peak_kb is None or kb > self.peak_kb):
-                self.peak_kb = kb
-            self._stop.wait(self._interval)
-
-    def start(self) -> "PeakRssSampler":
-        self.baseline_kb = _status_kb("VmRSS")
-        self.peak_kb = self.baseline_kb
-        if self.baseline_kb is not None:
-            self._thread.start()
-        return self
-
-    def stop(self) -> int | None:
-        """Peak-minus-baseline in bytes, or None if /proc is unreadable."""
-        self._stop.set()
-        if self.baseline_kb is None:
-            return None
-        self._thread.join(timeout=5.0)
-        kb = _status_kb("VmRSS")  # catch a final high-water at stop time
-        if kb is not None and kb > self.peak_kb:
-            self.peak_kb = kb
-        return max(self.peak_kb - self.baseline_kb, 0) * 1024
+# Peak-RSS accounting lives in repro.memwatch so the multi-host launch
+# path (every spawned rank) measures with the identical sampler.
+from repro.memwatch import PeakRssSampler  # noqa: E402
 
 
 # -- chunked synthetic generator ------------------------------------------
@@ -323,6 +269,78 @@ def scale_phase(workdir: str, n: int, seed: int, knobs: dict) -> dict:
     return out
 
 
+def multihost_phase(workdir: str, seed: int, knobs: dict) -> dict:
+    """Multi-process parity + per-host memory: 2 spawned ranks vs serial.
+
+    Runs the identical store/config through (a) the single-process
+    streaming fit in this process and (b) ``fit_gp --distributed-hosts``
+    rank processes connected over ``jax.distributed`` (gloo CPU
+    collectives — the laptop stand-in for the paper's multi-GPU ranks).
+    Asserts the Alg. 2 contract: every rank reaches the same nll
+    (<= 1e-8), and every rank's peak RSS stays under 2x ITS OWN
+    partitioned working-set model — the per-host memory bound that makes
+    "no process materializes the full dataset" checkable."""
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+    from repro.launch.fit_gp import main as fit_gp_main
+
+    n, d = knobs["mh_n"], knobs["mh_d"]
+    hosts = knobs["mh_hosts"]
+    store, _ = write_rff_store(os.path.join(workdir, f"mh{n}"), n, d, seed)
+    cfg = SBVConfig(n_blocks=knobs["mh_blocks"], m=knobs["mh_m"],
+                    alpha=knobs["alpha"], seed=seed)
+    fit_kw = dict(inner_steps=knobs["mh_steps"],
+                  outer_rounds=knobs["mh_rounds"],
+                  stream_chunk=knobs["mh_chunk"], device_cache=0)
+
+    t0 = time.time()
+    ref = fit_sbv(store, None, cfg, **fit_kw)
+    t_ref = time.time() - t0
+    ref_nll = float(ref.history[-1][2])
+
+    result_json = os.path.join(workdir, "mh_result.json")
+    merged = fit_gp_main([
+        "--store", store.path, "--distributed-hosts", str(hosts),
+        "--blocks", str(knobs["mh_blocks"]), "--m", str(knobs["mh_m"]),
+        "--inner-steps", str(knobs["mh_steps"]),
+        "--outer-rounds", str(knobs["mh_rounds"]),
+        "--stream-chunk", str(knobs["mh_chunk"]),
+        "--device-cache-mb", "0", "--seed", str(seed),
+        "--result-json", result_json,
+    ])[0]
+
+    parity = max(abs(r["nll"] - ref_nll) for r in merged["ranks"])
+    measured = all(r["peak_rss_bytes"] is not None for r in merged["ranks"])
+    rss_ratio = None
+    if measured:
+        rss_ratio = max(r["peak_rss_bytes"] / (2.0 * r["working_set_bytes"])
+                        for r in merged["ranks"])
+    slowdown = max(r["t_fit_s"] for r in merged["ranks"]) / t_ref
+    out = {
+        "mh_hosts": hosts, "mh_n": n,
+        "mh_nll_parity": float(parity),
+        "mh_nll_spread": float(merged["max_nll_spread"]),
+        "mh_rss_measured": measured,
+        "mh_rss_ratio": rss_ratio,
+        "mh_slowdown_vs_serial": float(slowdown),
+        "mh_max_halo_rows": max(r["stats"]["halo_rows"]
+                                for r in merged["ranks"]),
+        "mh_exchange_mb": max(r["stats"]["exchange_bytes"]
+                              for r in merged["ranks"]) / MB,
+    }
+    print(f"[fig_streaming_scale] multihost@{n}x{hosts}: "
+          f"nll parity {parity:.3e} (spread {out['mh_nll_spread']:.3e}), "
+          f"rss ratio {rss_ratio if rss_ratio is None else round(rss_ratio, 3)}, "
+          f"slowdown {slowdown:.2f}x vs serial")
+    assert parity <= 1e-8, (
+        f"multi-host nll diverged from the single-process fit: {parity:.3e}")
+    if measured:
+        assert rss_ratio <= 1.0, (
+            f"a rank's peak RSS exceeded 2x its partitioned working set "
+            f"(ratio {rss_ratio:.2f}) — the per-host memory contract broke")
+    return out
+
+
 def main(argv=None):
     ap = parser("fig_streaming_scale")
     ap.add_argument("--workdir", default=None,
@@ -330,6 +348,10 @@ def main(argv=None):
                          "afterwards)")
     ap.add_argument("--skip-parity", action="store_true",
                     help="only run the RSS-bounded scale phase")
+    ap.add_argument("--multihost-only", action="store_true",
+                    help="run only the multi-process parity/memory phase "
+                         "and save it as fig_streaming_mh (the CI "
+                         "'distributed' gate)")
     args = ap.parse_args(argv)
 
     if args.scale == "smoke":
@@ -338,19 +360,33 @@ def main(argv=None):
                      stream_chunk=131072, parity_steps=4, scale_steps=2,
                      bs_pred=32, m_pred=32, n_test=8192,
                      tier_n=20_000, tier_d=16, tier_rows_per_block=8,
-                     tier_m=4, tier_chunk=256, tier_steps=8)
+                     tier_m=4, tier_chunk=256, tier_steps=8,
+                     mh_n=8000, mh_d=4, mh_hosts=2, mh_blocks=64, mh_m=8,
+                     mh_chunk=2048, mh_steps=4, mh_rounds=2)
     else:  # paper: the 50M respiratory-scale run (hours; real hardware)
         n_scale, n_parity = 50_000_000, 200_000
         knobs = dict(d=8, rows_per_block=256, m=60, alpha=16.0,
                      stream_chunk=524288, parity_steps=4, scale_steps=30,
                      bs_pred=64, m_pred=120, n_test=100_000,
                      tier_n=200_000, tier_d=16, tier_rows_per_block=32,
-                     tier_m=8, tier_chunk=2048, tier_steps=20)
+                     tier_m=8, tier_chunk=2048, tier_steps=20,
+                     mh_n=200_000, mh_d=8, mh_hosts=4, mh_blocks=1024,
+                     mh_m=16, mh_chunk=32768, mh_steps=8, mh_rounds=2)
 
     calib = calibrate()
     workdir = args.workdir or tempfile.mkdtemp(prefix="sbv-streaming-")
     payload = {"scale": args.scale, "seed": args.seed, "calib_s": calib}
     try:
+        if args.multihost_only:
+            payload.update(multihost_phase(workdir, args.seed, knobs))
+            payload["t_serial_norm"] = None
+            table([payload],
+                  ["mh_hosts", "mh_n", "mh_nll_parity", "mh_nll_spread",
+                   "mh_rss_ratio", "mh_slowdown_vs_serial",
+                   "mh_max_halo_rows", "mh_exchange_mb"],
+                  title="streaming multihost")
+            save("fig_streaming_mh", payload)
+            return payload
         if not args.skip_parity:
             payload.update(parity_phase(workdir, n_parity, args.seed, knobs))
         payload.update(tier_phase(workdir, args.seed, knobs))

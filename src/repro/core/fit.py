@@ -144,7 +144,7 @@ def _piece_backend(backend: str, piece) -> str:
 def _fit_sbv_streaming(
     store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
     stream_chunk, n_buckets, spool_dir, distributed=None,
-    device_cache: int | None = None, prefetch: int = 2,
+    device_cache: int | None = None, prefetch: int = 2, multihost=None,
 ):
     """Out-of-core fit: every pass holds ~``stream_chunk`` data rows.
 
@@ -172,6 +172,17 @@ def _fit_sbv_streaming(
     streaming twin of the in-core distributed likelihood. The block
     reorder changes only the summation order vs. the serial streaming
     fit (<= 1e-8 over an optimization run).
+
+    ``multihost`` (a ``repro.multihost`` host comm) runs the
+    MULTI-PROCESS mode: this process constructs, packs, and spools only
+    its own partition (``multihost_preprocess`` over a
+    ``PartitionedStore``), and each inner step walks the hosts' pieces in
+    lockstep with one all-reduce of ``[loss, grad]`` per chunk per step —
+    the same O(1)-scalars-per-chunk comms contract as the in-process
+    ``distributed`` path, so optimizer state stays replicated and every
+    host finishes with identical parameters. With a ``LoopbackComm`` the
+    mode is bitwise the serial streaming fit; across P processes it
+    differs only in float summation order (<= 1e-8, like chunking).
     """
     import shutil
     import tempfile
@@ -182,6 +193,19 @@ def _fit_sbv_streaming(
     )
 
     from .packing import round_up
+
+    if multihost is not None:
+        if distributed is not None:
+            raise ValueError("multihost and in-process distributed= are "
+                             "mutually exclusive (one device per host)")
+        if n_buckets:
+            raise NotImplementedError("bucketed piece shapes are not wired "
+                                      "into the multihost mode yet")
+        return _fit_sbv_multihost(
+            store, cfg, init, nu, lr, inner_steps, outer_rounds, backend,
+            verbose, stream_chunk, spool_dir, multihost,
+            device_cache=device_cache, prefetch=prefetch,
+        )
 
     mesh = axis = sharding = None
     n_shards = 1
@@ -316,6 +340,123 @@ def _fit_sbv_streaming(
                      stream_stats=stats)
 
 
+def _fit_sbv_multihost(
+    store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
+    stream_chunk, spool_dir, comm, device_cache: int | None = None,
+    prefetch: int = 2,
+):
+    """Multi-process streaming fit: one `jax.distributed` host per
+    partition, construction and packing per host, one `[loss, grad]`
+    all-reduce per chunk per step (see `_fit_sbv_streaming`)."""
+    import shutil
+    import tempfile
+
+    from jax.flatten_util import ravel_pytree
+
+    from repro.data.store import PartitionedStore
+    from repro.data.streaming import (
+        device_cache_budget, multihost_preprocess, pack_block_chunk,
+        PackedChunkSpool, streaming_moments,
+    )
+
+    pstore = (store if isinstance(store, PartitionedStore)
+              else PartitionedStore(store, comm.size, comm.rank))
+    n, d = pstore.n_rows, pstore.d
+    if init is None:
+        _, var_y = streaming_moments(pstore, comm=comm)
+        params = KernelParams.create(sigma2=var_y, beta=0.5, nugget=1e-3, d=d)
+    else:
+        params = init
+    _, unravel = ravel_pytree(params)
+    n_param = int(np.asarray(ravel_pytree(params)[0]).size)
+    history = []
+    stats = {"n_chunks": 0, "n_pieces": 0, "packed_chunk_bytes_max": 0,
+             "spool_bytes": 0, "bs_max": 0, "bc": 0, "n_shards": 1,
+             "device_cached_pieces": 0, "device_cached_bytes": 0,
+             "h2d_bytes_per_step": 0, "inner_steps_total": 0,
+             "inner_time_s": 0.0, "n_hosts": comm.size, "rank": comm.rank,
+             "lockstep_chunks": 0, "allreduce_scalars_per_chunk": 1 + n_param}
+
+    for outer in range(outer_rounds):
+        beta_np = np.asarray(params.beta)
+        struct = multihost_preprocess(pstore, beta_np, cfg, stream_chunk, comm)
+        # Pad every LOCAL piece to one shared shape; hosts may compile
+        # different shapes — nothing cross-host depends on them (the
+        # lockstep all-reduce carries only the [loss, grad] vector).
+        bc_pad = max((len(r) for r in struct.plan), default=1)
+
+        if device_cache is None:
+            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * 8
+            budget = device_cache_budget(reserve_bytes=reserve)
+        else:
+            budget = int(device_cache)
+        work_dir = spool_dir or tempfile.mkdtemp(prefix="sbv-spool-")
+        spool = PackedChunkSpool(
+            os.path.join(work_dir, f"rank{comm.rank}-round{outer}"),
+            device_budget=budget)
+        try:
+            for ranks in struct.plan:
+                packed = pack_block_chunk(
+                    struct.table, struct.blocks, struct.neigh, ranks,
+                    m=cfg.m, bs_max=struct.bs_max, dtype=cfg.dtype,
+                )
+                piece = packed.pad_to_blocks(bc_pad)
+                spool.add(piece, tag=_piece_backend(backend, piece))
+            # Hosts iterate the SAME number of lockstep chunk slots per
+            # step; hosts out of local pieces contribute zeros.
+            n_lock = int(comm.allreduce_scalar(float(len(spool)), op="max"))
+            stats.update(
+                n_chunks=len(struct.plan), n_pieces=len(spool),
+                packed_chunk_bytes_max=max(stats["packed_chunk_bytes_max"],
+                                           spool.packed_bytes_max),
+                spool_bytes=max(stats["spool_bytes"], spool.packed_bytes_total),
+                bs_max=struct.bs_max, bc=struct.blocks.n_blocks,
+                device_cached_pieces=spool.n_device,
+                h2d_bytes_per_step=spool.disk_bytes_total,
+                device_cached_bytes=max(stats["device_cached_bytes"],
+                                        spool.device_bytes),
+                lockstep_chunks=n_lock,
+                **{k: v for k, v in struct.stats.items()},
+            )
+
+            state = adam_init(params)
+            t_inner = time.perf_counter()
+            zeros_vec = np.zeros(1 + n_param)
+            for it in range(inner_steps):
+                loss = 0.0
+                gsum = np.zeros(n_param)
+                pieces = spool.iter_arrays(prefetch=prefetch)
+                for _ in range(n_lock):
+                    entry = next(pieces, None)
+                    if entry is not None:
+                        arrs, piece_backend = entry
+                        grad_fn = _chunk_grad_fn(nu, piece_backend, n)
+                        v, g = grad_fn(params, *arrs)
+                        gflat = np.asarray(ravel_pytree(g)[0], np.float64)
+                        vec = np.concatenate([[float(v)], gflat])
+                    else:
+                        vec = zeros_vec
+                    red = comm.allreduce(vec)
+                    loss += float(red[0])
+                    gsum = gsum + red[1:]
+                grad = jax.tree.map(
+                    jnp.asarray, unravel(jnp.asarray(gsum)))
+                params, state = adam_update(grad, state, params, lr)
+                history.append((outer, it, float(loss)))
+                if verbose and it % 10 == 0:
+                    print(f"[fit-mh] rank={comm.rank} outer={outer} it={it} "
+                          f"nll/n={float(loss):.6f} "
+                          f"pieces={len(spool)}/{n_lock}")
+            stats["inner_time_s"] += time.perf_counter() - t_inner
+            stats["inner_steps_total"] += inner_steps
+        finally:
+            spool.cleanup()
+            if spool_dir is None:
+                shutil.rmtree(work_dir, ignore_errors=True)
+    return FitResult(params=params, history=history, packed=None,
+                     stream_stats=stats)
+
+
 def fit_sbv(
     x: np.ndarray,
     y: np.ndarray = None,
@@ -333,6 +474,7 @@ def fit_sbv(
     spool_dir: str | None = None,
     device_cache: int | None = None,
     prefetch: int = 2,
+    multihost=None,  # host comm (repro.multihost) for the multi-process fit
 ) -> FitResult:
     """Maximum-likelihood fit of (sigma^2, beta, nugget) with fixed nu.
 
@@ -355,11 +497,18 @@ def fit_sbv(
     ``_fit_sbv_streaming`` and docs/streaming.md. ``distributed=`` works
     with BOTH paths: in-core it shards the monolithic packed likelihood;
     streaming it shards every spooled piece (the 2.56B-point scaling
-    configuration)."""
+    configuration). ``multihost=`` (a host comm from
+    ``repro.multihost``) runs the MULTI-PROCESS streaming fit: each
+    ``jax.distributed`` process builds, packs, and spools only its own
+    row partition and the hosts all-reduce ``[loss, grad]`` once per
+    chunk per step (docs/streaming.md "multi-host construction")."""
     from repro.data.store import as_store, is_store
 
     if cfg is None:
         raise TypeError("fit_sbv requires an SBVConfig")
+    if multihost is not None and not (is_store(x) or stream_chunk is not None):
+        raise ValueError("multihost= requires the streaming path: pass a "
+                         "row store and/or set stream_chunk")
     if is_store(x) or stream_chunk is not None:
         from repro.data.streaming import DEFAULT_STRUCT_BATCH
 
@@ -368,7 +517,7 @@ def fit_sbv(
             store, cfg, init, nu, lr, inner_steps, outer_rounds, backend,
             verbose, stream_chunk or DEFAULT_STRUCT_BATCH, n_buckets, spool_dir,
             distributed=distributed, device_cache=device_cache,
-            prefetch=prefetch,
+            prefetch=prefetch, multihost=multihost,
         )
     d = x.shape[1]
     params = init or KernelParams.create(sigma2=float(np.var(y)), beta=0.5, nugget=1e-3, d=d)

@@ -203,8 +203,20 @@ class _RowsView:
             if step != 1:
                 raise IndexError("strided slices are not supported on stores")
             x, y = self._store.read_slice(start, stop)
-        else:
-            x, y = self._store.read_rows(np.atleast_1d(np.asarray(idx, np.int64)))
+            return x if self._field == "x" else y
+        idx = np.asarray(idx, np.int64)
+        if idx.ndim == 0:
+            # Scalar index: ndarray semantics drop the row axis —
+            # ``view[5]`` is ``(d,)``/scalar, not ``(1, d)``/``(1,)``.
+            i = int(idx)
+            if i < 0:
+                i += self._store.n_rows
+            if not 0 <= i < self._store.n_rows:
+                raise IndexError(
+                    f"row index {int(idx)} outside [0, {self._store.n_rows})")
+            x, y = self._store.read_rows(np.asarray([i], np.int64))
+            return x[0] if self._field == "x" else y[0]
+        x, y = self._store.read_rows(idx)
         return x if self._field == "x" else y
 
 
@@ -250,6 +262,10 @@ class ArrayStore:
     @property
     def n_shards(self) -> int:
         return len(self._m["shards"])
+
+    @property
+    def shard_rows(self) -> int:
+        return int(self._m["shard_rows"])
 
     @property
     def x_rows(self) -> _RowsView:
@@ -357,3 +373,101 @@ class ArrayStore:
         with cls.create(path, x.shape[1], dtype=x.dtype, shard_rows=shard_rows) as w:
             w.append(x, np.asarray(y, dtype=x.dtype))
         return cls(path)
+
+
+def partition_bounds(n_rows: int, n_parts: int, align: int = 1) -> np.ndarray:
+    """Row boundaries of an even, ``align``-multiple partition of ``n_rows``.
+
+    Returns ``(n_parts + 1,)`` monotone bounds with part p owning
+    ``[bounds[p], bounds[p + 1])``. Boundaries snap to multiples of
+    ``align`` (shard size for an ``ArrayStore``: a host then only touches
+    its own shard files on sequential passes) except the final bound,
+    which is always ``n_rows``. Tail parts may be empty when
+    ``n_rows < n_parts * align`` — consumers must tolerate zero-row
+    partitions.
+    """
+    n_parts = max(1, int(n_parts))
+    align = max(1, int(align))
+    per = -(-n_rows // n_parts)           # ceil split ...
+    per = -(-per // align) * align        # ... rounded up to the alignment
+    bounds = np.minimum(np.arange(n_parts + 1, dtype=np.int64) * per, n_rows)
+    return bounds
+
+
+class PartitionedStore:
+    """One host's row-range view of a shared store (multi-host Alg. 2).
+
+    Speaks the full row-store protocol, but ``iter_chunks`` walks ONLY
+    the rows of this partition — every sequential construction pass over
+    a ``PartitionedStore`` touches ~``n_rows / n_parts`` rows, which is
+    what bounds each host's share of the multi-host streaming build.
+    Chunk windows stay aligned to the GLOBAL ``[k*rows, (k+1)*rows)``
+    grid (clipped to the partition), so the union of all hosts' windows
+    is exactly the single-process window sequence.
+
+    Random access (``read_rows`` / ``read_slice``) deliberately passes
+    through to the parent store — the paper's setting is a shared
+    parallel filesystem, and construction needs a few tiny global
+    gathers (k-means seeding). ``remote_rows_read`` counts rows served
+    from outside the partition so tests can pin that the steady-state
+    pipeline never leans on it.
+    """
+
+    def __init__(self, store, n_parts: int, part: int, align: int | None = None):
+        if not 0 <= int(part) < int(n_parts):
+            raise ValueError(f"part {part} outside [0, {n_parts})")
+        self.parent = store
+        self.n_parts = int(n_parts)
+        self.part = int(part)
+        if align is None:
+            align = getattr(store, "shard_rows", 1)
+            # Shard alignment only helps while it doesn't starve parts.
+            if align > 1 and store.n_rows < self.n_parts * align:
+                align = 1
+        self._bounds = partition_bounds(store.n_rows, self.n_parts, align)
+        self.start = int(self._bounds[self.part])
+        self.stop = int(self._bounds[self.part + 1])
+        self.remote_rows_read = 0  # telemetry: rows gathered outside the part
+
+    # -- metadata (global, protocol-compatible) ------------------------
+
+    @property
+    def n_rows(self) -> int:
+        return self.parent.n_rows
+
+    @property
+    def d(self) -> int:
+        return self.parent.d
+
+    @property
+    def dtype(self):
+        return self.parent.dtype
+
+    @property
+    def n_local(self) -> int:
+        return self.stop - self.start
+
+    # -- reads ---------------------------------------------------------
+
+    def read_slice(self, start: int, stop: int):
+        self.remote_rows_read += max(
+            0, min(stop, self.parent.n_rows) - max(start, 0)
+        ) - max(0, min(stop, self.stop) - max(start, self.start))
+        return self.parent.read_slice(start, stop)
+
+    def read_rows(self, idx: np.ndarray):
+        idx = np.asarray(idx, dtype=np.int64)
+        self.remote_rows_read += int(np.sum((idx < self.start) | (idx >= self.stop)))
+        return self.parent.read_rows(idx)
+
+    def iter_chunks(self, rows: int | None = None):
+        """Global-grid chunk windows clipped to this partition."""
+        n = self.parent.n_rows
+        rows = n if rows is None else max(1, int(rows))
+        first = (self.start // rows) * rows
+        for gstart in range(first, self.stop, rows):
+            a, b = max(gstart, self.start), min(gstart + rows, self.stop)
+            if a >= b:
+                continue
+            x, y = self.parent.read_slice(a, b)
+            yield a, x, y

@@ -15,21 +15,34 @@ held on host per pass:
 
     PYTHONPATH=src python -m repro.launch.fit_gp --dataset synthetic \
         --n 1000000 --write-store /tmp/sbv-1m --stream-chunk 131072
+
+Multi-process (docs/streaming.md "multi-host construction"):
+``--distributed-hosts K`` re-launches this driver as K rank processes
+connected through ``jax.distributed`` — each rank owns one partition of
+the store, builds its share of the block structure (k-means all-reduce +
+halo NNS exchange), spools only its own pieces, and joins the others in
+a lockstep per-chunk loss/grad all-reduce. The parent merges the
+per-rank ``--result-json`` files. Heavy imports stay INSIDE ``main``:
+a rank must call ``jax.distributed.initialize`` before anything
+initializes the JAX backend, so the module must import clean.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
 import time
 
 import numpy as np
 
-from repro.core.fit import fit_sbv
-from repro.core.pipeline import SBVConfig
-from repro.core.predict import predict_sbv
-from repro.data.gp_sim import metarvm_dataset, paper_synthetic, satellite_drag_like
-
 
 def load_dataset(name: str, n: int, seed: int):
+    from repro.data.gp_sim import (metarvm_dataset, paper_synthetic,
+                                   satellite_drag_like)
+
     if name == "synthetic":
         x, y, params = paper_synthetic(seed, n)
         return x, y
@@ -40,7 +53,7 @@ def load_dataset(name: str, n: int, seed: int):
     raise ValueError(name)
 
 
-def main(argv=None):
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="synthetic",
                     choices=["synthetic", "satdrag", "metarvm"])
@@ -71,7 +84,201 @@ def main(argv=None):
     ap.add_argument("--prefetch", type=int, default=2,
                     help="disk-tier spool pieces staged ahead of the device "
                          "by the H2D producer thread (0 = synchronous reads)")
-    args = ap.parse_args(argv)
+    ap.add_argument("--distributed-hosts", type=int, default=0, metavar="K",
+                    help="spawn K rank processes over jax.distributed and "
+                         "run the multi-host streaming fit (requires the "
+                         "out-of-core path: --store/--write-store)")
+    ap.add_argument("--result-json", default=None, metavar="PATH",
+                    help="write the run summary as JSON (rank processes "
+                         "write PATH.rank<r>; the parent merges them)")
+    return ap
+
+
+def write_store(args):
+    """Chunked synthetic generation into a store (bounded RAM)."""
+    from repro.data.store import ArrayStore
+
+    # The synthetic dataset is a GP DRAW, so its chunks must come from one
+    # shared function realization (paper_synthetic_chunks fixes the RFF
+    # weights once); satdrag/metarvm are deterministic simulators of x,
+    # so re-seeding their x-sampling per chunk is sound.
+    gen_rows = 65536
+    if args.dataset == "synthetic":
+        from repro.data.gp_sim import paper_synthetic_chunks
+
+        chunks = paper_synthetic_chunks(args.seed, args.n, gen_rows=gen_rows)
+    else:
+        def _sim_chunks():
+            done, part = 0, 0
+            while done < args.n:
+                k = min(args.n - done, gen_rows)
+                yield load_dataset(args.dataset, k, args.seed + part)
+                done += k
+                part += 1
+
+        chunks = _sim_chunks()
+    first_x, first_y = next(chunks)
+    with ArrayStore.create(args.write_store, first_x.shape[1]) as w:
+        w.append(first_x, first_y)
+        for xp, yp in chunks:
+            w.append(xp, yp)
+    store = ArrayStore(args.write_store)
+    print(f"[fit_gp] wrote store {args.write_store}: "
+          f"{store.n_rows} rows x {store.d} dims, {store.n_shards} shards")
+    return store
+
+
+# -- multi-host launch ------------------------------------------------------
+
+
+def _spawn_hosts(args) -> dict:
+    """Parent mode: launch K rank copies of this driver and merge results.
+
+    The parent only prepares the store and babysits processes — it never
+    touches jax.distributed, so heavy imports are safe here."""
+    if args.write_store:
+        write_store(args)
+        store_dir = args.write_store
+    elif args.store:
+        store_dir = args.store
+    else:
+        raise SystemExit("--distributed-hosts requires --store or "
+                         "--write-store (ranks share one store directory)")
+
+    from repro.multihost import ENV_COORD, ENV_NPROCS, ENV_RANK
+
+    k = int(args.distributed_hosts)
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+
+    child_argv = [sys.executable, "-m", "repro.launch.fit_gp",
+                  "--store", store_dir,
+                  "--blocks", str(args.blocks), "--m", str(args.m),
+                  "--inner-steps", str(args.inner_steps),
+                  "--outer-rounds", str(args.outer_rounds),
+                  "--backend", args.backend, "--seed", str(args.seed),
+                  "--prefetch", str(args.prefetch)]
+    if args.stream_chunk:
+        child_argv += ["--stream-chunk", str(args.stream_chunk)]
+    if args.device_cache_mb is not None:
+        child_argv += ["--device-cache-mb", str(args.device_cache_mb)]
+    if args.result_json:
+        child_argv += ["--result-json", args.result_json]
+
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH",
+                   os.path.dirname(os.path.dirname(os.path.dirname(
+                       os.path.abspath(__file__)))))
+    procs = []
+    for r in range(k):
+        e = dict(env)
+        e[ENV_RANK] = str(r)
+        e[ENV_NPROCS] = str(k)
+        e[ENV_COORD] = f"127.0.0.1:{port}"
+        procs.append(subprocess.Popen(child_argv, env=e,
+                                      stdout=subprocess.PIPE,
+                                      stderr=subprocess.STDOUT))
+    failed = False
+    for r, p in enumerate(procs):
+        out, _ = p.communicate(timeout=3600)
+        text = out.decode(errors="replace")
+        for line in text.splitlines():
+            print(f"[rank {r}] {line}")
+        if p.returncode != 0:
+            print(f"[fit_gp] rank {r} exited with {p.returncode}")
+            failed = True
+    if failed:
+        raise SystemExit("multi-host fit failed — see rank logs above")
+
+    merged = None
+    if args.result_json:
+        ranks = []
+        for r in range(k):
+            with open(f"{args.result_json}.rank{r}") as f:
+                ranks.append(json.load(f))
+        nlls = [rk["nll"] for rk in ranks]
+        merged = {"n_hosts": k, "nll": nlls[0],
+                  "max_nll_spread": float(max(nlls) - min(nlls)),
+                  "ranks": ranks}
+        with open(args.result_json, "w") as f:
+            json.dump(merged, f, indent=1)
+        print(f"[fit_gp] merged {k} rank results -> {args.result_json} "
+              f"(nll={nlls[0]:.9f}, spread={merged['max_nll_spread']:.3g})")
+    return merged or {"n_hosts": k}
+
+
+def _run_rank(ctx, args) -> dict:
+    """Child mode: one rank of the multi-host streaming fit.
+
+    Ranks fit only (prediction stays a single-process concern for now)
+    and report their partition telemetry + peak RSS so the launcher and
+    the benchmarks can assert the per-host memory contract."""
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+    from repro.data.store import ArrayStore
+    from repro.data.streaming import working_set_model
+    from repro.memwatch import PeakRssSampler
+
+    if not args.store:
+        raise SystemExit("rank processes need --store")
+    store = ArrayStore(args.store)
+    cfg = SBVConfig(n_blocks=args.blocks, m=args.m, seed=args.seed)
+    device_cache = (None if args.device_cache_mb is None
+                    else int(args.device_cache_mb * 2**20))
+
+    sampler = PeakRssSampler().start()
+    t0 = time.time()
+    res = fit_sbv(store, None, cfg, inner_steps=args.inner_steps,
+                  outer_rounds=args.outer_rounds, backend=args.backend,
+                  stream_chunk=args.stream_chunk, verbose=True,
+                  device_cache=device_cache, prefetch=args.prefetch,
+                  multihost=ctx)
+    t_fit = time.time() - t0
+    peak = sampler.stop()
+
+    st = res.stream_stats
+    ws = working_set_model(st, store.n_rows, store.d, args.m,
+                           args.stream_chunk or store.n_rows)
+    out = {
+        "rank": ctx.rank, "n_hosts": ctx.size,
+        "nll": float(res.history[-1][2]), "t_fit_s": t_fit,
+        "sigma2": float(res.params.sigma2),
+        "beta": np.asarray(res.params.beta).tolist(),
+        "nugget": float(res.params.nugget),
+        "peak_rss_bytes": peak,
+        "working_set_bytes": int(ws["total"]),
+        "stats": {key: v for key, v in st.items()
+                  if isinstance(v, (int, float, str, bool))},
+    }
+    print(f"[fit_gp] rank {ctx.rank}/{ctx.size}: nll={out['nll']:.9f} "
+          f"fit {t_fit:.1f}s, owned {st.get('owned_rows')}/{store.n_rows} "
+          f"rows (+{st.get('halo_rows', 0)} halo), "
+          f"exchange {st.get('exchange_bytes', 0) / 2**20:.1f}MB")
+    if args.result_json:
+        with open(f"{args.result_json}.rank{ctx.rank}", "w") as f:
+            json.dump(out, f, indent=1)
+    ctx.shutdown()
+    return out
+
+
+def main(argv=None):
+    # Rank processes must connect BEFORE any import initializes the JAX
+    # backend — repro.multihost imports jax lazily, so this is safe.
+    from repro.multihost import MultihostContext
+
+    ctx = MultihostContext.from_env()
+    args = build_parser().parse_args(argv)
+
+    if ctx is not None:
+        return _run_rank(ctx, args), None
+    if args.distributed_hosts and args.distributed_hosts > 1:
+        return _spawn_hosts(args), None
+
+    from repro.core.fit import fit_sbv
+    from repro.core.pipeline import SBVConfig
+    from repro.core.predict import predict_sbv
 
     store = None
     if args.store:
@@ -79,36 +286,7 @@ def main(argv=None):
 
         store = ArrayStore(args.store)
     elif args.write_store:
-        from repro.data.store import ArrayStore
-
-        # Chunked generation: bounded RAM even for paper-scale --n. The
-        # synthetic dataset is a GP DRAW, so its chunks must come from one
-        # shared function realization (paper_synthetic_chunks fixes the
-        # RFF weights once); satdrag/metarvm are deterministic simulators
-        # of x, so re-seeding their x-sampling per chunk is sound.
-        gen_rows = 65536
-        if args.dataset == "synthetic":
-            from repro.data.gp_sim import paper_synthetic_chunks
-
-            chunks = paper_synthetic_chunks(args.seed, args.n, gen_rows=gen_rows)
-        else:
-            def _sim_chunks():
-                done, part = 0, 0
-                while done < args.n:
-                    k = min(args.n - done, gen_rows)
-                    yield load_dataset(args.dataset, k, args.seed + part)
-                    done += k
-                    part += 1
-
-            chunks = _sim_chunks()
-        first_x, first_y = next(chunks)
-        with ArrayStore.create(args.write_store, first_x.shape[1]) as w:
-            w.append(first_x, first_y)
-            for xp, yp in chunks:
-                w.append(xp, yp)
-        store = ArrayStore(args.write_store)
-        print(f"[fit_gp] wrote store {args.write_store}: "
-              f"{store.n_rows} rows x {store.d} dims, {store.n_shards} shards")
+        store = write_store(args)
 
     if store is not None:
         rng = np.random.default_rng(args.seed + 999)
@@ -189,6 +367,14 @@ def main(argv=None):
     cover = float(np.mean((y_te_c >= pred.ci_low) & (y_te_c <= pred.ci_high))) * 100
     print(f"[fit_gp] predict {n_test} pts in {t_pred:.1f}s: "
           f"MSPE={mspe:.5f} RMSPE={rmspe:.2f}% CI95-coverage={cover:.1f}%")
+    if args.result_json:
+        payload = {"nll": float(res.history[-1][2]), "t_fit_s": t_fit,
+                   "t_predict_s": t_pred, "mspe": mspe, "rmspe_pct": rmspe,
+                   "sigma2": float(res.params.sigma2),
+                   "beta": np.asarray(res.params.beta).tolist(),
+                   "nugget": float(res.params.nugget)}
+        with open(args.result_json, "w") as f:
+            json.dump(payload, f, indent=1)
     return res, mspe
 
 

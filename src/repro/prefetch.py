@@ -73,7 +73,22 @@ class Prefetcher:
 
     def __iter__(self):
         while True:
-            item = self._q.get()
+            try:
+                item = self._q.get(timeout=0.1)
+            except queue.Empty:
+                # Nothing queued: only keep waiting while the producer can
+                # still deliver. After ``close()`` (stop set) or after an
+                # exception/sentinel already drained the queue (thread
+                # dead), a bare ``get()`` would block forever. The final
+                # non-blocking drain closes the race where the producer
+                # enqueued its last item between our timeout and its exit.
+                if self._stop.is_set() or not self._thread.is_alive():
+                    try:
+                        item = self._q.get_nowait()
+                    except queue.Empty:
+                        return
+                else:
+                    continue
             if item is _DONE:
                 return
             if isinstance(item, BaseException):

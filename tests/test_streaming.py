@@ -507,6 +507,152 @@ def test_rss_bounded_200k_fit(tmp_path):
     )
 
 
+# -- streaming data-plane regression fixes ---------------------------------
+# Each test below pins a latent bug found in the PR-6 sweep; each FAILED
+# on the pre-fix code.
+
+
+def test_lazy_flat_blocks_duplicate_ids_accounted_once(tmp_path, small):
+    """Duplicate uncached block ids in ONE call are gathered and accounted
+    once. Pre-fix, each duplicate re-gathered the block's rows and bumped
+    ``_cache_bytes`` for a copy the cache never retained — the counter
+    inflated permanently and drove the LRU into premature eviction."""
+    from repro.data.streaming import LazyFlatBlocks, streaming_kmeans_blocks
+
+    x, y, _ = small
+    st = ArrayStore.from_arrays(str(tmp_path / "lz"), x, y, shard_rows=400)
+    beta = np.full(4, 0.5)
+    blocks, radii, _ = streaming_kmeans_blocks(st, beta, 12, seed=0)
+    flat = LazyFlatBlocks(blocks, radii, st, beta)
+
+    out = flat.points_of_blocks(np.array([3, 3, 5, 3]))
+    # The stacked result still repeats block 3 per request...
+    assert out.shape == (3 * flat.sizes[3] + flat.sizes[5], 4)
+    # ...but each miss was read from the store exactly once,
+    assert flat.gathered_rows == flat.sizes[3] + flat.sizes[5]
+    # and the byte counter equals what the cache actually retains.
+    assert flat._cache_bytes == sum(v.nbytes for v in flat._cache.values())
+
+    # Accounting stays exact across repeats and cache hits.
+    flat.points_of_blocks(np.array([5, 3, 5]))
+    assert flat._cache_bytes == sum(v.nbytes for v in flat._cache.values())
+    assert flat.gathered_rows == flat.sizes[3] + flat.sizes[5]
+
+
+def _tiny_packed():
+    from repro.core.packing import PackedBlocks
+
+    bc, bs, m, d = 2, 3, 2, 2
+    return PackedBlocks(
+        blk_x=np.zeros((bc, bs, d)), blk_y=np.zeros((bc, bs)),
+        blk_mask=np.ones((bc, bs), bool), nn_x=np.zeros((bc, m, d)),
+        nn_y=np.zeros((bc, m)), nn_mask=np.ones((bc, m), bool),
+        owners=np.zeros(bc, np.int32))
+
+
+def test_spool_reusable_after_cleanup(tmp_path):
+    """A spool must accept adds again after ``cleanup()``: the multi-round
+    fit reuses per-round spool paths. Pre-fix, ``cleanup`` removed the
+    directory but left ``_made_dir`` set, so the next overflow-to-disk
+    ``add`` crashed in ``np.savez`` with FileNotFoundError — and the tier
+    gauges kept counting entries that no longer existed."""
+    from repro.data.streaming import PackedChunkSpool
+
+    sp = PackedChunkSpool(str(tmp_path / "sp"), device_budget=0)
+    sp.add(_tiny_packed())
+    assert sp.n_disk == 1 and sp.disk_bytes_total > 0
+    sp.cleanup()
+    assert len(sp) == 0
+    assert sp.device_bytes == 0 and sp.disk_bytes_total == 0
+
+    sp.add(_tiny_packed())  # pre-fix: FileNotFoundError here
+    pieces = list(sp.iter_arrays(prefetch=0))
+    assert len(pieces) == 1
+    assert np.asarray(pieces[0][0][0]).shape == (2, 3, 2)
+    sp.cleanup()
+    assert not os.path.exists(sp.path)
+
+
+def test_streaming_moments_survive_large_offset(tmp_path):
+    """Variance of y with ``|mean| >> std`` (a 1e8 offset leaves ~1e-1
+    significant digits in the one-pass ``E[y^2] - mean^2`` form, which
+    pre-fix collapsed to the clamp at 0 and silently initialized
+    ``sigma2 ~ 0``). The shifted two-pass form keeps full precision, and
+    both store backends still agree bitwise."""
+    from repro.data.streaming import streaming_moments
+
+    rng = np.random.default_rng(0)
+    x = rng.uniform(size=(4000, 3))
+    y = 1e8 + rng.standard_normal(4000)
+    mean, var = streaming_moments(MemoryStore(x, y), batch_rows=700)
+    assert np.isclose(mean, y.mean(), rtol=1e-12)
+    assert np.isclose(var, y.var(), rtol=1e-9)
+
+    st = ArrayStore.from_arrays(str(tmp_path / "mo"), x, y, shard_rows=512)
+    m_disk, v_disk = streaming_moments(st, batch_rows=700)
+    assert mean == m_disk and var == v_disk
+
+
+def test_prefetcher_iteration_terminates_after_close():
+    """Iterating a closed (or exception-drained) Prefetcher must return,
+    not block forever on an empty queue. Pre-fix, ``__iter__`` sat in a
+    bare ``q.get()`` with no producer left to feed it — a consumer that
+    resumed iteration after ``close()`` hung the fit."""
+    import threading
+
+    from repro.prefetch import Prefetcher
+
+    pf = Prefetcher(iter(range(100)), depth=1)
+    it = iter(pf)
+    assert next(it) == 0
+    pf.close()
+
+    got = {"done": False}
+
+    def drain():
+        list(it)  # pre-fix: blocks forever
+        got["done"] = True
+
+    th = threading.Thread(target=drain, daemon=True)
+    th.start()
+    th.join(timeout=10.0)
+    assert got["done"], "iteration did not terminate after close()"
+
+    # An exception consumed mid-stream leaves the thread dead and the
+    # queue empty — later iteration must also terminate (idempotent).
+    def boom():
+        raise RuntimeError("producer failed")
+        yield  # pragma: no cover
+
+    pf2 = Prefetcher(boom(), depth=1)
+    with pytest.raises(RuntimeError, match="producer failed"):
+        next(iter(pf2))
+    assert list(iter(pf2)) == []
+    pf2.close()
+
+
+def test_rows_view_scalar_indexing(tmp_path, small):
+    """``view[5]`` must follow ndarray semantics and drop the row axis —
+    pre-fix it returned ``(1, d)``/``(1,)``, which silently broadcast
+    wrong shapes into consumers written against in-core arrays."""
+    x, y, _ = small
+    st = ArrayStore.from_arrays(str(tmp_path / "rv"), x, y, shard_rows=400)
+    xv, yv = st.x_rows, st.y_rows
+
+    assert xv[5].shape == (4,)
+    assert np.array_equal(xv[5], x[5])
+    assert np.ndim(yv[5]) == 0 and yv[5] == y[5]
+    # negative indices normalize like ndarray
+    assert np.array_equal(xv[-1], x[-1]) and yv[-1] == y[-1]
+    # array/slice paths keep the row axis
+    assert xv[np.array([5])].shape == (1, 4)
+    assert xv[10:12].shape == (2, 4)
+    with pytest.raises(IndexError):
+        xv[len(xv)]
+    with pytest.raises(IndexError):
+        yv[-len(yv) - 1]
+
+
 def test_working_set_model_terms(small):
     """The RSS-gate model must stay tied to real run state: every term
     positive, and the streaming budget strictly under the in-core cost
