@@ -23,6 +23,22 @@ against a single reference call is not defined).
 Note on CPU numbers: XLA CPU compute already saturates the host cores,
 so overlap buys ~1.1x here; on a real TPU/GPU the host packing cost
 vanishes from steady-state entirely (that is the point of the design).
+
+Soak phase (ISSUE 7): the SAME mixed-SLO arrival stream — bulk sweeps
+up front, then Poisson interactive arrivals (20 ms mean) with a
+back-to-back burst in the middle — replayed against drain mode and the
+continuous-batching scheduler. Reported per mode: per-class client-side
+p50/p99 latency, bulk goodput, queue-depth peak, preemptions. Gates
+(ratios and parity only — absolute times ride calib_s noise):
+
+  * interactive p99 (continuous) strictly below drain — preemption at
+    chunk boundaries must beat waiting out whole bulk batches;
+  * bulk goodput within 10% of drain — goodput is total bulk points
+    over the wall time to drain the whole mixed stream, identical
+    compute in both modes, so the ratio isolates scheduler overhead;
+  * sampled continuous-mode requests match their own per-request
+    ``predict_sbv`` to <= 1e-12 (the scheduler reorders chunks, never
+    changes what any chunk computes).
 """
 from __future__ import annotations
 
@@ -48,7 +64,7 @@ def main():
     from repro.data.gp_sim import paper_synthetic
     from repro.serving import (
         BatchingPolicy, GPServer, GPServerConfig, PipelineConfig,
-        predict_pipelined, predict_synchronous,
+        SchedulerPolicy, predict_pipelined, predict_synchronous,
     )
 
     if args.scale == "smoke":
@@ -133,6 +149,108 @@ def main():
           f"compiled-shapes={stats['n_compiled_shapes']} "
           f"padding-occupancy={stats['padding_occupancy']:.3f}")
 
+    # ---- soak: mixed-SLO arrival stream, drain vs continuous ----------
+    # Interactive requests are exactly one chunk so the padded compute is
+    # identical in both modes and the ratios below isolate SCHEDULING.
+    if args.scale == "smoke":
+        soak_chunk, n_bulk, bulk_pts, n_inter, burst = 512, 3, 4096, 24, 8
+    else:
+        soak_chunk, n_bulk, bulk_pts, n_inter, burst = 2048, 4, 16384, 64, 16
+    inter_pts = soak_chunk
+    soak_pipe = PipelineConfig(bs_pred=bs, m_pred=m, chunk_size=soak_chunk,
+                               backend=backend,
+                               n_buckets=4 if args.bucketed else None)
+    arr_rng = np.random.default_rng(args.seed + 2)
+    bulk_x = [arr_rng.uniform(size=(bulk_pts, x.shape[1]))
+              for _ in range(n_bulk)]
+    inter_x = [arr_rng.uniform(size=(inter_pts, x.shape[1]))
+               for _ in range(n_inter)]
+    gaps = arr_rng.exponential(0.020, size=n_inter)
+    half = (n_inter - burst) // 2
+    gaps[half:half + burst] = 0.0            # mid-stream burst
+
+    def run_soak(sched_policy):
+        cfg_s = GPServerConfig(
+            pipeline=soak_pipe,
+            policy=BatchingPolicy(max_points=soak_chunk, max_wait_s=0.002),
+            seed=args.seed, scheduler=sched_policy,
+        )
+        srv = GPServer(params, x, y, cfg_s, index=server.index)
+        futs = []
+        with srv:
+            srv.warmup()
+            t_start = time.time()
+
+            def sub(xq, slo):
+                t0 = time.time()
+                stamp = {}
+                f = srv.submit(xq, slo=slo)
+                f.add_done_callback(
+                    lambda _f, s=stamp: s.setdefault("t", time.time()))
+                futs.append((slo, t0, f, stamp, xq))
+
+            for xb in bulk_x:                # bulk sweeps land up front
+                sub(xb, "bulk")
+            for g, xi in zip(gaps, inter_x):
+                if g > 0:
+                    time.sleep(g)
+                sub(xi, "interactive")
+            srv.flush()
+            for _, _, f, _, _ in futs:
+                f.result(timeout=1200)
+        t_total = max(s["t"] for _, _, _, s, _ in futs) - t_start
+        lat = {"interactive": [], "bulk": []}
+        for slo, t0, _, s, _ in futs:
+            lat[slo].append(s["t"] - t0)
+        st = srv.stats.summary()
+        return {
+            "t_total_s": t_total,
+            "bulk_points_per_s": n_bulk * bulk_pts / t_total,
+            "interactive_p50_s": float(np.percentile(lat["interactive"], 50)),
+            "interactive_p99_s": float(np.percentile(lat["interactive"], 99)),
+            "bulk_p50_s": float(np.percentile(lat["bulk"], 50)),
+            "bulk_p99_s": float(np.percentile(lat["bulk"], 99)),
+            "queue_depth_peak": st["queue_depth_peak"],
+            "n_preempted": st["n_preempted"],
+        }, futs
+
+    soak_drain, _ = run_soak(None)
+    soak_cont, cont_futs = run_soak(SchedulerPolicy())
+
+    # Parity sample: continuous-mode requests against their OWN
+    # per-request predict_sbv (drain coalesces with per-batch seeds, so
+    # the per-request contract only exists in scheduler mode).
+    parity_max = 0.0
+    sample = [cont_futs[0], cont_futs[n_bulk], cont_futs[-1]]
+    for slo, _, f, _, xq in sample:
+        res = f.result(timeout=0)
+        ref_s = predict_sbv(params, x, y, xq, bs_pred=bs, m_pred=m,
+                            seed=args.seed, n_sims=2, chunk_size=soak_chunk,
+                            backend=backend)
+        parity_max = max(parity_max,
+                         float(abs(res.mean - ref_s.mean).max()),
+                         float(abs(res.var - ref_s.var).max()))
+
+    p99_ratio = soak_cont["interactive_p99_s"] / soak_drain["interactive_p99_s"]
+    bulk_ratio = soak_cont["bulk_points_per_s"] / soak_drain["bulk_points_per_s"]
+    assert p99_ratio < 1.0, (
+        f"continuous interactive p99 must beat drain: ratio {p99_ratio:.3f}")
+    assert bulk_ratio >= 0.9, (
+        f"continuous bulk goodput fell >10% below drain: {bulk_ratio:.3f}")
+    assert parity_max <= 1e-12, (
+        f"continuous-mode per-request parity broken: {parity_max:.3e}")
+
+    soak_rows = [dict(mode=mode, **vals) for mode, vals in
+                 (("drain", soak_drain), ("continuous", soak_cont))]
+    table(soak_rows,
+          ["mode", "interactive_p50_s", "interactive_p99_s", "bulk_p99_s",
+           "bulk_points_per_s", "queue_depth_peak", "n_preempted"],
+          title=f"soak: {n_bulk}x{bulk_pts} bulk + {n_inter}x{inter_pts} "
+                f"interactive (Poisson 20ms + burst {burst}), chunk={soak_chunk}")
+    print(f"\nsoak: interactive p99 continuous/drain = {p99_ratio:.3f} "
+          f"(must be < 1), bulk goodput ratio = {bulk_ratio:.3f} "
+          f"(must be >= 0.9), parity(sampled) = {parity_max:.1e}")
+
     from benchmarks.common import calibrate
 
     save("serving_throughput", {
@@ -144,6 +262,15 @@ def main():
         "parity_double_vs_sync": float(d_sync),
         "parity_vs_predict_sbv": float(d_ref),
         "server_stats": stats,
+        "soak": {
+            "chunk": soak_chunk, "n_bulk": n_bulk, "bulk_pts": bulk_pts,
+            "n_interactive": n_inter, "interactive_pts": inter_pts,
+            "burst": burst,
+            "drain": soak_drain, "continuous": soak_cont,
+            "interactive_p99_ratio": p99_ratio,
+            "bulk_points_ratio": bulk_ratio,
+            "parity_max": parity_max,
+        },
     })
 
 

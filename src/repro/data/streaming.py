@@ -477,13 +477,23 @@ class PackedChunkSpool:
     (pinned in tests/test_streaming.py).
     """
 
-    def __init__(self, path: str, device_budget: int = 0, sharding=None):
+    def __init__(self, path: str, device_budget: int = 0, sharding=None,
+                 device_stage: bool = True):
         self.path = path
         self.device_budget = int(device_budget)
         self.sharding = sharding
-        # entries: (kind, payload, tag, nbytes); payload is a tuple of
-        # device arrays ("dev") or an .npz path ("disk"); ``tag`` is an
+        # device_stage=False keeps staged arrays as host numpy (no
+        # device_put): the serving-side result sink spools outputs that
+        # are consumed on the host, so a device round-trip would be pure
+        # overhead (and would perturb nothing anyway — float64 .npz
+        # round-trips are bit-exact either way).
+        self.device_stage = device_stage
+        # entries: (kind, payload, tag, nbytes, keys); payload is a tuple
+        # of staged arrays ("dev") or an .npz path ("disk"); ``tag`` is an
         # opaque caller label (the fit stores the resolved backend).
+        # ``keys`` is None for the positional packed-piece layout
+        # (_SPOOL_KEYS) or the entry's own name tuple for ``add_arrays``
+        # bundles, which stage back as dicts.
         self._entries: list[tuple] = []
         self._made_dir = False
         self.packed_bytes_max = 0
@@ -503,6 +513,8 @@ class PackedChunkSpool:
         return len(self) - self.n_device
 
     def _put_device(self, a: np.ndarray):
+        if not self.device_stage:
+            return np.asarray(a)
         import jax
         import jax.numpy as jnp
 
@@ -517,7 +529,7 @@ class PackedChunkSpool:
         self.packed_bytes_total += nbytes
         if self.device_bytes + nbytes <= self.device_budget:
             dev = tuple(self._put_device(a) for a in arrs)
-            self._entries.append(("dev", dev, tag, nbytes))
+            self._entries.append(("dev", dev, tag, nbytes, None))
             self.device_bytes += nbytes
             return
         if not self._made_dir:
@@ -526,20 +538,46 @@ class PackedChunkSpool:
         f = os.path.join(self.path, f"chunk_{len(self._entries):05d}.npz")
         np.savez(f, owners=packed.owners,
                  **{k: a for k, a in zip(_SPOOL_KEYS, arrs)})
-        self._entries.append(("disk", f, tag, nbytes))
+        self._entries.append(("disk", f, tag, nbytes, None))
+        self.disk_bytes_total += nbytes
+
+    def add_arrays(self, arrays: dict, tag=None) -> None:
+        """Spool one ad-hoc named-array bundle under the same two-tier /
+        add-order contract as ``add``. This is the serving-side sink
+        entry point (``serving/pipeline.py::SpoolResultSink``): the keys
+        are the caller's own, and ``iter_arrays`` stages the bundle back
+        as a dict instead of the positional packed-piece tuple."""
+        items = {k: np.asarray(v) for k, v in arrays.items()}
+        nbytes = sum(a.nbytes for a in items.values())
+        keys = tuple(items)
+        self.packed_bytes_max = max(self.packed_bytes_max, nbytes)
+        self.packed_bytes_total += nbytes
+        if self.device_bytes + nbytes <= self.device_budget:
+            dev = {k: self._put_device(a) for k, a in items.items()}
+            self._entries.append(("dev", dev, tag, nbytes, keys))
+            self.device_bytes += nbytes
+            return
+        if not self._made_dir:
+            os.makedirs(self.path, exist_ok=True)
+            self._made_dir = True
+        f = os.path.join(self.path, f"chunk_{len(self._entries):05d}.npz")
+        np.savez(f, **items)
+        self._entries.append(("disk", f, tag, nbytes, keys))
         self.disk_bytes_total += nbytes
 
     def _stage(self, entry):
-        """(device-array tuple, tag) for one entry — the H2D hot path.
+        """(staged arrays, tag) for one entry — the H2D hot path.
 
         Disk entries are read and transferred here; running this on the
         Prefetcher's producer thread is what hides disk+transfer time
         behind the consumer's compute."""
-        kind, payload, tag, _nb = entry
+        kind, payload, tag, _nb, keys = entry
         if kind == "dev":
             return payload, tag
         with np.load(payload) as z:
-            return tuple(self._put_device(z[k]) for k in _SPOOL_KEYS), tag
+            if keys is None:
+                return tuple(self._put_device(z[k]) for k in _SPOOL_KEYS), tag
+            return {k: self._put_device(z[k]) for k in keys}, tag
 
     def iter_arrays(self, prefetch: int = 2):
         """Yield ``(arrays, tag)`` per piece, in add order.

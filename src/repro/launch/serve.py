@@ -80,6 +80,25 @@ def serve_gp(argv=None):
                          "occupancy")
     ap.add_argument("--pipeline", default="double", choices=["double", "sync"],
                     help="double = overlap host packing with device compute")
+    ap.add_argument("--scheduler", default="drain",
+                    choices=["drain", "continuous"],
+                    help="continuous = SGLang-style running batch: SLO-aware "
+                         "admission at every chunk boundary, cancellation, "
+                         "backpressure (docs/serving.md); drain = the classic "
+                         "coalesce-and-drain micro-batcher")
+    ap.add_argument("--slo", default="interactive",
+                    choices=["interactive", "bulk"],
+                    help="SLO class of the generated request stream "
+                         "(--scheduler continuous)")
+    ap.add_argument("--queue-bound", type=int, default=None, metavar="POINTS",
+                    help="bound the admission queue at this many queued "
+                         "points; overflowing submits fail fast with "
+                         "AdmissionQueueFull (--scheduler continuous)")
+    ap.add_argument("--spool-threshold", type=int, default=None,
+                    metavar="POINTS",
+                    help="requests at least this large stream results to a "
+                         "disk spool sink instead of RAM "
+                         "(--scheduler continuous)")
     ap.add_argument("--compare", action="store_true",
                     help="race sync vs double-buffered on the same workload "
                          "and cross-check parity against predict_sbv")
@@ -96,7 +115,7 @@ def serve_gp(argv=None):
     from repro.launch.fit_gp import load_dataset
     from repro.serving import (
         BatchingPolicy, GPServer, GPServerConfig, PipelineConfig,
-        predict_pipelined, predict_synchronous,
+        SchedulerPolicy, predict_pipelined, predict_synchronous,
     )
 
     if args.train_store:
@@ -135,11 +154,16 @@ def serve_gp(argv=None):
         dtype=dtype, chunk_size=args.chunk, n_workers=args.workers,
         n_buckets=args.buckets, stream_chunk=args.stream_chunk,
     )
+    sched_policy = None
+    if args.scheduler == "continuous":
+        sched_policy = SchedulerPolicy(queue_bound=args.queue_bound,
+                                       spool_threshold=args.spool_threshold)
     cfg = GPServerConfig(
         pipeline=pipe_cfg,
         policy=BatchingPolicy(max_points=args.max_points or args.chunk,
                               max_wait_s=args.max_wait_ms / 1e3,
                               adaptive=args.adaptive_wait),
+        scheduler=sched_policy,
         pipelined=args.pipeline == "double",
         seed=args.seed,
     )
@@ -157,23 +181,38 @@ def serve_gp(argv=None):
         # Concurrent request stream: near-equal splits of the test set.
         bounds = np.linspace(0, args.n_test, args.requests + 1).astype(int)
         t0 = time.time()
-        futs = [server.submit(x_test[a:b])
+        futs = [server.submit(x_test[a:b], slo=args.slo)
                 for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
         results = [f.result() for f in futs]
         dt = time.time() - t0
 
-    mean = np.concatenate([r.mean for r in results])
-    var = np.concatenate([r.var for r in results])
+    def _arrays(res):
+        return res.sink.materialize() if res.sink is not None \
+            else (res.mean, res.var)
+
+    parts = [_arrays(r) for r in results]
+    mean = np.concatenate([m for m, _ in parts])
+    var = np.concatenate([v for _, v in parts])
     stats = server.stats.summary()
     print(f"[serve-gp] {args.n_test} predictions / {len(futs)} requests in "
           f"{dt:.2f}s: {args.n_test/dt:.0f} pts/s (backend={args.backend}, "
-          f"workers={args.workers}, pipeline={args.pipeline})")
+          f"workers={args.workers}, pipeline={args.pipeline}, "
+          f"scheduler={args.scheduler})")
     print(f"[serve-gp] batches={stats['n_batches']} "
           f"occupancy={stats['mean_batch_points']:.0f} pts/batch "
           f"latency p50={stats['latency_p50_s']*1e3:.1f}ms "
           f"p95={stats['latency_p95_s']*1e3:.1f}ms "
           f"compiled-shapes={stats['n_compiled_shapes']} "
           f"padding-occupancy={stats['padding_occupancy']:.3f}")
+    if args.scheduler == "continuous":
+        per_cls = " ".join(
+            f"{name}: n={c['n']} p50={c['latency_p50_s']*1e3:.1f}ms "
+            f"p99={c['latency_p99_s']*1e3:.1f}ms"
+            for name, c in stats["by_class"].items())
+        print(f"[serve-gp] {per_cls} | queue-peak={stats['queue_depth_peak']} "
+              f"preempted={stats['n_preempted']} "
+              f"rejected={stats['n_rejected']} "
+              f"cancelled={stats['n_cancelled']}")
     assert np.all(np.isfinite(mean)) and np.all(var > 0)
 
     if args.compare:

@@ -1,16 +1,30 @@
 # Persistent batched GP serving (docs/serving.md):
-#   batching.py  — request micro-batching (max-size/max-wait policy)
-#   pipeline.py  — double-buffered chunk pipeline (pack k+1 || compute k)
+#   batching.py  — request micro-batching + SLO / scheduler policy types
+#   scheduler.py — continuous-batching scheduler (running batch, SLO-aware
+#                  admission at chunk boundaries, cancellation, backpressure)
+#   pipeline.py  — double-buffered chunk engine (pack k+1 || compute k),
+#                  per-request pack protocol, spool-backed result sink
 #   server.py    — GPServer: owns the train index + compiled predict program
-#   telemetry.py — per-request latency + batch-occupancy stats
-from .batching import BatchingPolicy, MicroBatcher, PredictRequest
-from .pipeline import PipelineConfig, predict_pipelined, predict_synchronous
+#   telemetry.py — per-request / per-SLO-class latency + occupancy stats
+from .batching import (
+    AdmissionQueueFull, ArrivalWindow, BatchingPolicy, MicroBatcher,
+    PredictRequest, SchedulerPolicy, ServeRequest, SLOClass,
+)
+from .pipeline import (
+    PipelineConfig, SpoolResultSink, pack_scheduled, predict_pipelined,
+    predict_synchronous, request_chunk_bounds, run_chunk_stream,
+)
+from .scheduler import ContinuousScheduler, ScheduledChunk
 from .server import GPServer, GPServerConfig, ServeResult
 from .telemetry import RequestTrace, ServerStats
 
 __all__ = [
-    "BatchingPolicy", "MicroBatcher", "PredictRequest",
-    "PipelineConfig", "predict_pipelined", "predict_synchronous",
+    "AdmissionQueueFull", "ArrivalWindow", "BatchingPolicy", "MicroBatcher",
+    "PredictRequest", "SchedulerPolicy", "ServeRequest", "SLOClass",
+    "PipelineConfig", "SpoolResultSink", "pack_scheduled",
+    "predict_pipelined", "predict_synchronous", "request_chunk_bounds",
+    "run_chunk_stream",
+    "ContinuousScheduler", "ScheduledChunk",
     "GPServer", "GPServerConfig", "ServeResult",
     "RequestTrace", "ServerStats",
 ]

@@ -49,6 +49,95 @@ class BatchingPolicy:
     ema_alpha: float = 0.2     # EMA weight of the newest inter-arrival gap
 
 
+class ArrivalWindow:
+    """Inter-arrival EMA -> the batching window currently in force.
+
+    The adaptive-window machinery shared by the drain-mode ``MicroBatcher``
+    and the continuous scheduler's idle-admission gate (scheduler.py): both
+    observe arrivals on an injectable clock and derive the same
+    ``clamp(window_factor * ema, [0, max_wait_s])`` window, so the two
+    admission paths cannot drift and both stay deterministic under a fake
+    clock."""
+
+    def __init__(self, policy: BatchingPolicy, clock=now):
+        self.policy = policy
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._last_arrival: float | None = None
+        self._ema_gap_s: float | None = None
+
+    def observe(self) -> float:
+        """Stamp one arrival; returns the clock reading used."""
+        t = self._clock()
+        with self._lock:
+            if self._last_arrival is not None:
+                gap = max(t - self._last_arrival, 0.0)
+                a = self.policy.ema_alpha
+                self._ema_gap_s = (
+                    gap if self._ema_gap_s is None
+                    else (1.0 - a) * self._ema_gap_s + a * gap
+                )
+            self._last_arrival = t
+        return t
+
+    def effective_wait_s(self) -> float:
+        """The batching window currently in force (see BatchingPolicy)."""
+        pol = self.policy
+        with self._lock:
+            ema = self._ema_gap_s
+        if not pol.adaptive or ema is None:
+            return pol.max_wait_s
+        return min(pol.max_wait_s, max(0.0, pol.window_factor * ema))
+
+
+# -- SLO-aware scheduling policy (consumed by scheduler.py) ----------------
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """One service class of the continuous scheduler.
+
+    ``priority`` breaks virtual-time ties (lower wins — an interactive
+    arrival lands at the running batch's virtual time and therefore
+    preempts queued bulk work at the next chunk boundary); ``weight`` is
+    the weighted-fair share of chunk boundaries when several classes are
+    backlogged, which is what keeps bulk work starvation-free."""
+
+    name: str
+    priority: int
+    weight: float
+
+
+INTERACTIVE = SLOClass("interactive", priority=0, weight=3.0)
+BULK = SLOClass("bulk", priority=1, weight=1.0)
+
+
+def default_slo_classes() -> dict[str, SLOClass]:
+    return {c.name: c for c in (INTERACTIVE, BULK)}
+
+
+class AdmissionQueueFull(RuntimeError):
+    """Backpressure: the bounded admission queue cannot take this request."""
+
+
+@dataclass
+class SchedulerPolicy:
+    """Continuous-batching scheduler knobs (docs/serving.md).
+
+    ``queue_bound`` bounds the admission queue in query POINTS — a submit
+    that would exceed it raises ``AdmissionQueueFull`` so producers feel
+    backpressure instead of growing host RAM. ``spool_threshold`` routes
+    the results of any request at least that large to a disk-backed
+    ``SpoolResultSink`` (pipeline.py), so a bulk sweep never holds its
+    full mean/var in RAM server-side."""
+
+    classes: dict[str, SLOClass] = field(default_factory=default_slo_classes)
+    queue_bound: int | None = None       # max queued points (None = unbounded)
+    max_active_requests: int = 64        # running-batch cap
+    spool_threshold: int | None = None   # spool results of requests >= this
+    spool_dir: str | None = None         # default: a fresh tempdir
+
+
 @dataclass
 class PredictRequest:
     """One in-flight request: a query array + the future holding its slice
@@ -61,6 +150,14 @@ class PredictRequest:
 
     def __post_init__(self):
         self.trace = RequestTrace(n_points=self.x.shape[0])
+
+
+@dataclass
+class ServeRequest(PredictRequest):
+    """A scheduler-mode request: carries its SLO class and cancel flag."""
+
+    slo: str = "interactive"
+    cancelled: bool = field(init=False, default=False)
 
 
 class MicroBatcher:
@@ -79,37 +176,21 @@ class MicroBatcher:
         self._q: queue.Queue = queue.Queue()
         self._closed = threading.Event()
         self._clock = clock            # injectable for deterministic tests
-        self._arrival_lock = threading.Lock()
-        self._last_arrival: float | None = None
-        self._ema_gap_s: float | None = None
+        self._window = ArrivalWindow(policy, clock=clock)
 
     def put(self, req: PredictRequest) -> None:
         if self._closed.is_set():
             raise RuntimeError("server is stopped")
-        req.t_arrival = self._observe_arrival()
+        req.t_arrival = self._window.observe()
         self._q.put(req)
 
-    def _observe_arrival(self) -> float:
-        t = self._clock()
-        with self._arrival_lock:
-            if self._last_arrival is not None:
-                gap = max(t - self._last_arrival, 0.0)
-                a = self.policy.ema_alpha
-                self._ema_gap_s = (
-                    gap if self._ema_gap_s is None
-                    else (1.0 - a) * self._ema_gap_s + a * gap
-                )
-            self._last_arrival = t
-        return t
+    @property
+    def _ema_gap_s(self) -> float | None:
+        return self._window._ema_gap_s
 
     def effective_wait_s(self) -> float:
         """The batching window currently in force (see BatchingPolicy)."""
-        pol = self.policy
-        with self._arrival_lock:
-            ema = self._ema_gap_s
-        if not pol.adaptive or ema is None:
-            return pol.max_wait_s
-        return min(pol.max_wait_s, max(0.0, pol.window_factor * ema))
+        return self._window.effective_wait_s()
 
     def flush(self) -> None:
         """Force the dispatcher to emit whatever is queued right now."""

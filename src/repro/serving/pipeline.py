@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.kernels_math import KernelParams
 from repro.core.predict import (
-    TrainIndex, iter_query_chunks, packed_predict, scatter_packed,
+    TrainIndex, iter_query_chunks, pack_queries, packed_predict, scatter_packed,
 )
 from repro.prefetch import Prefetcher
 
@@ -144,6 +144,90 @@ def _chunks(index: TrainIndex, x_test: np.ndarray, cfg: PipelineConfig,
     )
 
 
+def request_chunk_bounds(n: int, chunk_size: int | None,
+                         bs_pred: int) -> list[tuple[int, int]]:
+    """Per-request chunk bounds — the EXACT stepping of
+    ``iter_query_chunks`` (``core/predict.py``), extracted so the
+    continuous scheduler can enumerate a request's chunks up front.
+    Chunk ``ci`` covering rows ``[start, stop)`` must be packed with
+    ``pack_scheduled`` below; together they guarantee the scheduler's
+    per-request results are those of a per-request ``predict_sbv`` call,
+    no matter how admission interleaves requests."""
+    step = n if chunk_size is None else max(int(chunk_size), bs_pred)
+    return [(start, min(n, start + step)) for start in range(0, n, step)]
+
+
+def pack_scheduled(index: TrainIndex, cfg: PipelineConfig, item,
+                   seed: int = 0):
+    """Pack one scheduled (request, chunk) unit with the per-request
+    ``iter_query_chunks`` protocol: the request's own array is the test
+    set, ``offset``/``seed`` advance within the request. The scheduler
+    only ever reorders WHICH of these units runs when — what each unit
+    computes is pinned here, which is the whole 1e-12 parity contract."""
+    return pack_queries(
+        index, item.entry.req.x[item.start:item.stop], cfg.bs_pred,
+        cfg.m_pred, alpha=cfg.alpha, seed=seed + item.ci,
+        n_workers=cfg.n_workers, offset=item.start,
+        pad_shapes=cfg.chunk_size is not None, dtype=cfg.dtype,
+    )
+
+
+def run_chunk_stream(
+    params: KernelParams,
+    cfg: PipelineConfig,
+    jobs,
+    emit,
+    mesh=None,
+    stats: ServerStats | None = None,
+) -> None:
+    """The double-buffered chunk engine, decoupled from any one request.
+
+    ``jobs`` yields ``(tag, pack_fn)`` pairs; ``pack_fn()`` runs on the
+    producer thread (host packing overlaps device compute), the consumer
+    dispatches each chunk's device program asynchronously and calls
+    ``emit(tag, piece, mu, var)`` one chunk LATER — i.e. while the device
+    crunches chunk k, chunk k-1's results are landed. Because ``jobs`` is
+    a generator pulled lazily (bounded queue of depth ``cfg.prefetch``),
+    every pull is a chunk boundary: a scheduler-backed ``jobs`` can admit
+    newly arrived requests and honor cancellations between any two
+    chunks.
+
+    A job with ``pack_fn=None`` is a BARRIER: it lands whatever is still
+    in flight without computing anything. An endless jobs source (the
+    continuous scheduler) MUST emit barriers when it idles, otherwise
+    the one-chunk-delayed emit strands the last chunk of a burst until
+    the next arrival. ``predict_pipelined`` is a thin wrapper over this
+    function, so the drain-mode and continuous-mode paths run one engine
+    and cannot drift."""
+    split = make_chunk_split(cfg)
+    compute = make_chunk_compute(params, cfg, mesh)
+
+    inflight = None  # (tag, [(piece, mu_dev, var_dev), ...]) — not yet forced
+
+    def land(slot):
+        tag, pieces = slot
+        for piece, mu, vr in pieces:
+            emit(tag, piece, mu, vr)
+
+    with Prefetcher(jobs, depth=cfg.prefetch,
+                    stage=lambda job: (
+                        job[0], None if job[1] is None else split(job[1]())),
+                    name="sbv-packer") as staged:
+        for tag, host_pieces in staged:
+            if host_pieces is None:        # barrier: flush the delayed emit
+                if inflight is not None:
+                    land(inflight)
+                    inflight = None
+                continue
+            pieces = compute(host_pieces)  # async dispatch, returns early
+            _record_pieces(stats, pieces)
+            if inflight is not None:
+                land(inflight)
+            inflight = (tag, pieces)
+        if inflight is not None:
+            land(inflight)
+
+
 def predict_synchronous(
     params: KernelParams,
     index: TrainIndex,
@@ -193,22 +277,72 @@ def predict_pipelined(
     if n_test == 0:
         return mean, var
 
-    split = make_chunk_split(cfg)
-    compute = make_chunk_compute(params, cfg, mesh)
+    # The packed chunk is built lazily on the PRODUCER thread: the jobs
+    # generator itself is iterated there (Prefetcher contract), so
+    # wrapping each already-packed chunk in a thunk keeps the exact
+    # pack/split/compute/scatter ordering of the original inline loop —
+    # results stay bitwise identical to predict_synchronous.
+    jobs = ((ci, (lambda p=packed: p))
+            for ci, packed in _chunks(index, x_test, cfg, seed))
 
-    inflight = None  # [(piece, mu_dev, var_dev), ...] — dispatched, not forced
-    # The bucket split is host numpy — the stage fn keeps it off the
-    # consumer's critical path, same as the rest of packing.
-    with Prefetcher(_chunks(index, x_test, cfg, seed), depth=cfg.prefetch,
-                    stage=lambda kv: split(kv[1]), name="sbv-packer") as staged:
-        for item in staged:
-            pieces = compute(item)   # async dispatch, returns early
-            _record_pieces(stats, pieces)
-            if inflight is not None:
-                for p_prev, mu_prev, vr_prev in inflight:
-                    scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
-            inflight = pieces
-        if inflight is not None:
-            for p_prev, mu_prev, vr_prev in inflight:
-                scatter_packed(p_prev, (mu_prev, mean), (vr_prev, var))
+    def emit(_tag, piece, mu, vr):
+        scatter_packed(piece, (mu, mean), (vr, var))  # forces the result
+
+    run_chunk_stream(params, cfg, jobs, emit, mesh=mesh, stats=stats)
     return mean, var
+
+
+class SpoolResultSink:
+    """Disk-backed per-request result sink (the backpressure story's
+    out-of-core leg): each completed chunk's (index, mean, var) triple is
+    spooled through ``PackedChunkSpool`` (``data/streaming.py``) with a
+    zero device budget, so a bulk sweep's full result never lives in
+    server RAM. ``float64`` ``.npz`` round-trips are bit-exact, so
+    ``materialize()`` reproduces the in-RAM result identically — the
+    parity contract survives the disk hop."""
+
+    def __init__(self, path: str, n_points: int):
+        from repro.data.streaming import PackedChunkSpool
+
+        self.n_points = int(n_points)
+        self._spool = PackedChunkSpool(path, device_budget=0,
+                                       device_stage=False)
+        self._n_added = 0
+
+    def add(self, piece, mu, var) -> None:
+        """Spool one computed chunk piece (masked rows only)."""
+        msk = np.asarray(piece.q_mask)
+        self._spool.add_arrays(
+            {"idx": np.asarray(piece.q_idx)[msk],
+             "mean": np.asarray(mu)[msk],
+             "var": np.asarray(var)[msk]},
+            tag=self._n_added,
+        )
+        self._n_added += 1
+
+    @property
+    def n_chunks(self) -> int:
+        return self._n_added
+
+    @property
+    def spooled_bytes(self) -> int:
+        return self._spool.disk_bytes_total
+
+    def iter_chunks(self):
+        """Yield ``(idx, mean, var)`` per spooled piece, in spool order —
+        the bounded-memory read path (one piece resident at a time)."""
+        for arrays, _tag in self._spool.iter_arrays(prefetch=0):
+            yield arrays["idx"], arrays["mean"], arrays["var"]
+
+    def materialize(self) -> tuple[np.ndarray, np.ndarray]:
+        """Assemble the full (mean, var) in RAM — convenience for callers
+        that decide the result fits after all."""
+        mean = np.zeros(self.n_points)
+        var = np.zeros(self.n_points)
+        for idx, mu, vr in self.iter_chunks():
+            mean[idx] = mu
+            var[idx] = vr
+        return mean, var
+
+    def cleanup(self) -> None:
+        self._spool.cleanup()

@@ -36,27 +36,45 @@ import numpy as np
 from repro.core.kernels_math import KernelParams
 from repro.core.predict import TrainIndex, build_train_index
 
-from .batching import BatchingPolicy, MicroBatcher, PredictRequest, concat_requests
-from .pipeline import PipelineConfig, predict_pipelined, predict_synchronous
+from .batching import (
+    BatchingPolicy, MicroBatcher, PredictRequest, SchedulerPolicy,
+    ServeRequest, concat_requests,
+)
+from .pipeline import (
+    PipelineConfig, pack_scheduled, predict_pipelined, predict_synchronous,
+    run_chunk_stream,
+)
+from .scheduler import ContinuousScheduler
 from .telemetry import ServerStats, now
 
 
 @dataclass
 class ServeResult:
-    """Per-request slice of a micro-batch result."""
+    """Per-request result. In-RAM requests carry ``mean``/``var``; bulk
+    requests routed through the out-of-core sink carry ``sink`` instead
+    (a ``SpoolResultSink`` — ``iter_chunks()`` for bounded-memory reads,
+    ``materialize()`` to assemble in RAM after all)."""
 
-    mean: np.ndarray
-    var: np.ndarray
+    mean: np.ndarray | None
+    var: np.ndarray | None
     latency_s: float
     queue_wait_s: float
+    sink: object = None
 
 
 @dataclass
 class GPServerConfig:
-    """Everything the server needs beyond the fitted kernel parameters."""
+    """Everything the server needs beyond the fitted kernel parameters.
+
+    ``scheduler=None`` keeps the original drain-and-rebatch loop
+    (micro-batches coalesced by concatenation — the benchmark baseline);
+    a ``SchedulerPolicy`` switches dispatch to the continuous-batching
+    scheduler (``scheduler.py``): per-request chunking, SLO-aware
+    admission at every chunk boundary, cancellation, backpressure."""
 
     pipeline: PipelineConfig = field(default_factory=PipelineConfig)
     policy: BatchingPolicy = field(default_factory=BatchingPolicy)
+    scheduler: SchedulerPolicy | None = None
     pipelined: bool = True    # False = synchronous chunk loop (baseline)
     seed: int = 0
 
@@ -85,6 +103,7 @@ class GPServer:
         config: GPServerConfig | None = None,
         beta_struct: np.ndarray | None = None,
         mesh=None,
+        index: TrainIndex | None = None,
     ):
         self.params = params
         self.config = config or GPServerConfig()
@@ -92,48 +111,79 @@ class GPServer:
         self.stats = ServerStats()
         beta = np.asarray(params.beta if beta_struct is None else beta_struct)
         cfg = self.config.pipeline
-        self.index: TrainIndex = build_train_index(
-            x_train, y_train, beta, cfg.m_pred,
-            n_workers=cfg.n_workers, seed=self.config.seed,
-            stream_chunk=cfg.stream_chunk,
-        )
+        if index is not None:
+            # Prebuilt index (must match m_pred/seed): lets several server
+            # configurations share one construction pass.
+            self.index = index
+        else:
+            self.index = build_train_index(
+                x_train, y_train, beta, cfg.m_pred,
+                n_workers=cfg.n_workers, seed=self.config.seed,
+                stream_chunk=cfg.stream_chunk,
+            )
         self.d = self.index.x.shape[1]
         self._batcher = MicroBatcher(self.config.policy)
+        self._sched: ContinuousScheduler | None = None
         self._thread: threading.Thread | None = None
         self._n_batches = 0
+
+    def _make_scheduler(self) -> ContinuousScheduler:
+        cfg = self.config.pipeline
+        return ContinuousScheduler(
+            policy=self.config.scheduler,
+            window=self.config.policy,
+            chunk_size=cfg.chunk_size,
+            bs_pred=cfg.bs_pred,
+            stats=self.stats,
+            result_factory=self._make_result,
+        )
 
     # -- lifecycle -----------------------------------------------------
 
     def start(self) -> "GPServer":
         if self._thread is not None:
             return self
-        if self._batcher.closed:  # restart after stop(): fresh batcher
-            self._batcher = MicroBatcher(self.config.policy)
+        if self.config.scheduler is not None:
+            if self._sched is None or self._sched.closed:  # fresh after stop()
+                self._sched = self._make_scheduler()
+            target = self._continuous_loop
+        else:
+            if self._batcher.closed:  # restart after stop(): fresh batcher
+                self._batcher = MicroBatcher(self.config.policy)
+            target = self._dispatch_loop
         self._thread = threading.Thread(
-            target=self._dispatch_loop, name="gp-server", daemon=True
+            target=target, name="gp-server", daemon=True
         )
         self._thread.start()
         return self
+
+    def _fail_pending(self, message: str) -> None:
+        source = self._sched if self._sched is not None else self._batcher
+        for req in source.drain_pending():
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_exception(RuntimeError(message))
 
     def stop(self, timeout_s: float = 120.0) -> None:
         """Drain pending requests, then stop the dispatch thread.
 
         Raises ``TimeoutError`` if the dispatch thread is still processing
-        after ``timeout_s`` (the server is NOT stopped in that case).
-        Requests that raced ``stop`` and were never picked up get their
-        futures failed rather than stranded."""
+        after ``timeout_s`` (the server is NOT stopped in that case) — but
+        only AFTER failing still-queued futures, so no client blocks
+        forever on a request the wedged dispatcher will never pick up."""
         if self._thread is None:
             return
-        self._batcher.close()
+        source = self._sched if self._sched is not None else self._batcher
+        source.close()
         self._thread.join(timeout=timeout_s)
         if self._thread.is_alive():
+            self._fail_pending(
+                f"server stop timed out after {timeout_s}s; request abandoned"
+            )
             raise TimeoutError(
                 f"gp-server dispatch thread still busy after {timeout_s}s"
             )
         self._thread = None
-        for req in self._batcher.drain_pending():
-            if req.future.set_running_or_notify_cancel():
-                req.future.set_exception(RuntimeError("server stopped"))
+        self._fail_pending("server stopped")
 
     def __enter__(self) -> "GPServer":
         return self.start()
@@ -143,8 +193,13 @@ class GPServer:
 
     # -- request path --------------------------------------------------
 
-    def submit(self, x: np.ndarray) -> Future:
-        """Enqueue a predict request; resolves to a ``ServeResult``."""
+    def submit(self, x: np.ndarray, slo: str = "interactive") -> Future:
+        """Enqueue a predict request; resolves to a ``ServeResult``.
+
+        ``slo`` picks the request's service class in continuous-scheduler
+        mode (``SchedulerPolicy.classes``; default classes are
+        ``interactive`` and ``bulk``) and is ignored in drain mode. May
+        raise ``AdmissionQueueFull`` under backpressure."""
         if self._thread is None:
             raise RuntimeError("GPServer.submit before start()")
         x = np.array(x, dtype=np.float64, copy=True)
@@ -152,9 +207,22 @@ class GPServer:
             x = x[None, :]
         if x.ndim != 2 or x.shape[1] != self.d:
             raise ValueError(f"expected (n, {self.d}) queries, got {x.shape}")
-        req = PredictRequest(x=x, future=Future())
-        self._batcher.put(req)
+        if self._sched is not None:
+            req = ServeRequest(x=x, future=Future(), slo=slo)
+            self._sched.submit(req)
+        else:
+            req = PredictRequest(x=x, future=Future())
+            self._batcher.put(req)
         return req.future
+
+    def cancel(self, future: Future) -> bool:
+        """Cancel an in-flight request; effective at the next chunk
+        boundary in scheduler mode (queued-or-running both work), queued
+        requests only in drain mode. Returns True if the cancellation
+        was accepted."""
+        if self._sched is not None:
+            return self._sched.cancel(future)
+        return future.cancel()
 
     def predict(self, x: np.ndarray, timeout_s: float | None = None) -> ServeResult:
         """Synchronous convenience: submit + wait."""
@@ -162,7 +230,10 @@ class GPServer:
 
     def flush(self) -> None:
         """Dispatch whatever is queued without waiting out the batch window."""
-        self._batcher.flush()
+        if self._sched is not None:
+            self._sched.flush()
+        else:
+            self._batcher.flush()
 
     def warmup(self, n_points: int | None = None) -> ServeResult:
         """Push one synthetic batch through to populate the jit cache before
@@ -235,3 +306,49 @@ class GPServer:
                 latency_s=req.trace.latency_s,
                 queue_wait_s=req.trace.queue_wait_s,
             ))
+
+    # -- continuous-batching dispatch (config.scheduler set) -----------
+
+    def _make_result(self, entry) -> ServeResult:
+        trace = entry.req.trace
+        mean, var = ((None, None) if entry.sink is not None
+                     else (entry.mean, entry.var))
+        return ServeResult(
+            mean=mean, var=var,
+            latency_s=trace.latency_s, queue_wait_s=trace.queue_wait_s,
+            sink=entry.sink,
+        )
+
+    def _continuous_loop(self) -> None:
+        """Drive the double-buffered engine from the scheduler: each pull
+        of the jobs generator is a chunk boundary (admission + reap +
+        weighted-fair pick); each emit lands one chunk back into its
+        request. All requests pack with the SAME base seed, so every
+        request reproduces ``predict_sbv(..., seed=config.seed)`` exactly
+        regardless of when it was admitted."""
+        sched = self._sched
+        cfg = self.config.pipeline
+        seed = self.config.seed
+
+        def jobs():
+            while True:
+                item = sched.next_chunk(idle_timeout_s=0.05)
+                if item is not None:
+                    yield item, (lambda it=item: pack_scheduled(
+                        self.index, cfg, it, seed=seed))
+                elif sched.closed:
+                    return
+                else:
+                    # Idle barrier: land the delayed in-flight chunk so a
+                    # burst's LAST chunk resolves now, not at the next
+                    # arrival (run_chunk_stream emits one chunk late).
+                    yield None, None
+
+        try:
+            run_chunk_stream(self.params, cfg, jobs(),
+                             sched.complete_chunk, mesh=self.mesh,
+                             stats=self.stats)
+        except BaseException as exc:
+            # The engine died (producer pack error surfaces here too):
+            # no future may be left hanging on a loop that exited.
+            sched.fail_all(exc)

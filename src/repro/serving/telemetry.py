@@ -52,6 +52,7 @@ class ServerStats:
 
     def __init__(self, window: int = 4096):
         self._lock = threading.Lock()
+        self._window = window
         self.n_requests = 0
         self.n_points = 0
         self.n_batches = 0
@@ -63,6 +64,15 @@ class ServerStats:
         self.compiled_shapes: set[tuple] = set()  # (bc, bs, m) seen by jit
         self.true_flops = 0.0    # padding-occupancy accounting: useful work
         self.padded_flops = 0.0  # ... vs what the padded shapes execute
+        # Continuous-scheduler signals (scheduler.py): per-SLO-class
+        # latency windows plus admission-queue / policy-event counters.
+        self.class_latencies: dict[str, deque] = {}
+        self.class_counts: dict[str, int] = {}
+        self.n_cancelled = 0
+        self.n_preempted = 0
+        self.n_rejected = 0            # AdmissionQueueFull submits
+        self.queue_depth_points = 0    # current gauge
+        self.queue_depth_peak = 0      # lifetime high-water mark
         self.t_start = now()
 
     def record_batch(self, n_requests: int, n_points: int) -> None:
@@ -88,12 +98,38 @@ class ServerStats:
             self.true_flops += float(true_flops)
             self.padded_flops += float(padded_flops)
 
-    def record_request(self, trace: RequestTrace) -> None:
+    def record_request(self, trace: RequestTrace, slo: str | None = None) -> None:
         with self._lock:
             self.n_requests += 1
             self.n_points += trace.n_points
             self.latencies_s.append(trace.latency_s)
             self.queue_waits_s.append(trace.queue_wait_s)
+            if slo is not None:
+                if slo not in self.class_latencies:
+                    self.class_latencies[slo] = deque(maxlen=self._window)
+                    self.class_counts[slo] = 0
+                self.class_latencies[slo].append(trace.latency_s)
+                self.class_counts[slo] += 1
+
+    def record_queue_depth(self, points: int) -> None:
+        """Admission-queue gauge (points), with a lifetime high-water mark."""
+        with self._lock:
+            self.queue_depth_points = int(points)
+            self.queue_depth_peak = max(self.queue_depth_peak, int(points))
+
+    def record_cancelled(self) -> None:
+        with self._lock:
+            self.n_cancelled += 1
+
+    def record_preemption(self) -> None:
+        """One pick that jumped ahead of older lower-priority work."""
+        with self._lock:
+            self.n_preempted += 1
+
+    def record_rejected(self) -> None:
+        """One submit refused by the bounded admission queue."""
+        with self._lock:
+            self.n_rejected += 1
 
     def summary(self) -> dict:
         with self._lock:
@@ -116,10 +152,24 @@ class ServerStats:
                 ),
                 "latency_p50_s": _percentile(lat, 0.50),
                 "latency_p95_s": _percentile(lat, 0.95),
+                "latency_p99_s": _percentile(lat, 0.99),
                 "queue_wait_p50_s": _percentile(waits, 0.50),
                 "n_compiled_shapes": len(self.compiled_shapes),
                 "padding_occupancy": (
                     self.true_flops / self.padded_flops
                     if self.padded_flops else 1.0
                 ),
+                "n_cancelled": self.n_cancelled,
+                "n_preempted": self.n_preempted,
+                "n_rejected": self.n_rejected,
+                "queue_depth_points": self.queue_depth_points,
+                "queue_depth_peak": self.queue_depth_peak,
+                "by_class": {
+                    name: {
+                        "n": self.class_counts[name],
+                        "latency_p50_s": _percentile(sorted(d), 0.50),
+                        "latency_p99_s": _percentile(sorted(d), 0.99),
+                    }
+                    for name, d in self.class_latencies.items()
+                },
             }

@@ -1,0 +1,586 @@
+"""Executable spec of the continuous-batching scheduler (scheduler.py).
+
+Everything here runs on an injectable FAKE clock with scripted arrivals —
+zero real sleeps — extending the ``MicroBatcher(clock=)`` pattern: every
+scheduling decision (admission order, weighted-fair pick, preemption,
+window close, cancellation point, backpressure) is replayed
+deterministically and asserted exactly.
+
+Two harness layers:
+
+* ``picks()`` / fake pieces — pure policy tests, no numerics: drive
+  ``next_chunk``/``complete_chunk`` by hand and assert the decision
+  sequence.
+* ``SchedHarness`` — the REAL result path (``pack_scheduled`` +
+  ``packed_predict`` + ``complete_chunk``), still single-threaded and
+  fake-clocked: one ``step()`` per chunk, so any admission interleaving
+  can be scripted and its per-request results compared against
+  per-request ``predict_sbv`` — the 1e-12 parity contract under
+  mid-stream admission, preemption, and cancellation.
+"""
+import os
+from concurrent.futures import Future
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import packed_predict, predict_sbv
+from repro.core.predict import build_train_index
+from repro.data.gp_sim import paper_synthetic
+from repro.serving import (
+    AdmissionQueueFull, BatchingPolicy, ContinuousScheduler, PipelineConfig,
+    SchedulerPolicy, ServeRequest, SpoolResultSink, pack_scheduled,
+    request_chunk_bounds,
+)
+from repro.serving.telemetry import ServerStats
+
+pytestmark = pytest.mark.scheduler
+
+
+# -- harness -----------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def mk_req(n: int = 4, slo: str = "interactive", d: int = 2) -> ServeRequest:
+    return ServeRequest(x=np.zeros((n, d)), future=Future(), slo=slo)
+
+
+def mk_sched(clock=None, stats=None, chunk_size=4, bs_pred=2, **policy_kw):
+    """Scheduler with a zero batching window: admission happens at the
+    first boundary after submit unless a test opts into a window."""
+    window = policy_kw.pop("window", BatchingPolicy(max_wait_s=0.0))
+    return ContinuousScheduler(
+        policy=SchedulerPolicy(**policy_kw), window=window,
+        chunk_size=chunk_size, bs_pred=bs_pred,
+        clock=clock or FakeClock(), stats=stats,
+    )
+
+
+def fake_complete(sched, item):
+    """Land one chunk without numerics: a minimal piece whose scatter
+    writes recognizable values (the within-request row index)."""
+    n = item.stop - item.start
+    piece = SimpleNamespace(
+        q_idx=np.arange(item.start, item.stop),
+        q_mask=np.ones(n, dtype=bool),
+    )
+    vals = np.arange(item.start, item.stop, dtype=float)
+    sched.complete_chunk(item, piece, vals, vals + 0.5)
+
+
+def picks(sched, limit=100, complete=True):
+    """Drain the scheduler single-threadedly, returning the pick sequence
+    (the schedule itself — what the policy tests assert on)."""
+    out = []
+    for _ in range(limit):
+        item = sched.next_chunk()
+        if item is None:
+            return out
+        out.append(item)
+        if complete:
+            fake_complete(sched, item)
+    raise AssertionError("scheduler did not drain")
+
+
+# -- chunk protocol ----------------------------------------------------
+
+
+def test_request_chunk_bounds_mirror_iter_query_chunks():
+    """The scheduler's per-request chunking is EXACTLY the
+    ``iter_query_chunks`` stepping (step = max(chunk_size, bs_pred)) —
+    the precondition of the parity contract."""
+    assert request_chunk_bounds(10, 4, 2) == [(0, 4), (4, 8), (8, 10)]
+    assert request_chunk_bounds(10, None, 25) == [(0, 10)]
+    assert request_chunk_bounds(3, 4, 8) == [(0, 3)]   # step = bs_pred floor
+    assert request_chunk_bounds(8, 4, 2) == [(0, 4), (4, 8)]
+    assert request_chunk_bounds(1, 4096, 25) == [(0, 1)]
+
+
+# -- admission ordering / weighted fairness ----------------------------
+
+
+def test_interactive_preempts_queued_bulk_in_admission_order():
+    """A bulk sweep is running; an interactive arrival enters at the
+    running batch's virtual time and its chunk is picked at the NEXT
+    boundary, ahead of the bulk request's remaining chunks."""
+    clock = FakeClock()
+    stats = ServerStats()
+    sched = mk_sched(clock=clock, stats=stats)
+    bulk = mk_req(12, slo="bulk")        # 3 chunks of 4
+    sched.submit(bulk)
+    first = sched.next_chunk()
+    assert first.request is bulk and first.ci == 0
+
+    clock.advance(0.001)
+    inter = mk_req(4, slo="interactive")
+    sched.submit(inter)
+    nxt = sched.next_chunk()
+    assert nxt.request is inter          # preempts bulk chunks 1, 2
+    assert stats.n_preempted >= 1        # jumped ahead of older bulk work
+    fake_complete(sched, first)
+    fake_complete(sched, nxt)
+    rest = picks(sched)
+    assert [it.request for it in rest] == [bulk, bulk]
+    assert [it.ci for it in rest] == [1, 2]
+
+
+def test_weighted_fair_keeps_bulk_starvation_free():
+    """Both classes backlogged: interactive (weight 3) gets 3 of every 4
+    boundaries, bulk (weight 1) gets the 4th — every 4-pick window
+    contains BOTH classes, so neither starves."""
+    sched = mk_sched()
+    inter = mk_req(9 * 4, slo="interactive")   # 9 chunks
+    bulk = mk_req(9 * 4, slo="bulk")           # 9 chunks
+    sched.submit(bulk)     # bulk submitted FIRST — weights still hold
+    sched.submit(inter)
+    seq = [it.request.slo for it in picks(sched, limit=30, complete=False)]
+    assert len(seq) == 18
+    # 3:1 share while both are backlogged (interactive drains after its
+    # 9 chunks; the tail is all bulk).
+    both = seq[:12]
+    assert both.count("interactive") == 9 and both.count("bulk") == 3
+    for i in range(len(both) - 3):
+        win = both[i:i + 4]
+        assert "bulk" in win and "interactive" in win
+    # Per-request chunk order is always in-order regardless of class.
+    for slo in ("interactive", "bulk"):
+        cis = [it for it, s in zip(range(len(seq)), seq) if s == slo]
+        assert cis == sorted(cis)
+
+
+def test_same_class_requests_run_fifo():
+    sched = mk_sched()
+    reqs = [mk_req(4, slo="interactive") for _ in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    got = [it.request for it in picks(sched, complete=False)]
+    assert got == reqs
+
+
+# -- cancellation ------------------------------------------------------
+
+
+def test_cancellation_takes_effect_within_one_chunk():
+    """Cancel between boundaries: the already-dispatched chunk completes
+    (result discarded), every remaining chunk is dropped at the next
+    boundary, and the future reports cancelled."""
+    stats = ServerStats()
+    sched = mk_sched(stats=stats)
+    req = mk_req(12, slo="bulk")         # 3 chunks
+    sched.submit(req)
+    first = sched.next_chunk()
+    assert first.ci == 0
+    assert sched.cancel(req.future)
+    # The in-flight chunk lands AFTER the cancel — discarded, no error.
+    fake_complete(sched, first)
+    assert sched.next_chunk() is None    # chunks 1, 2 never scheduled
+    assert req.future.cancelled()
+    with pytest.raises(Exception):
+        req.future.result(timeout=0)
+    assert stats.n_cancelled == 1
+
+
+def test_cancel_queued_request_before_admission():
+    stats = ServerStats()
+    sched = mk_sched(stats=stats)
+    req = mk_req(4)
+    sched.submit(req)
+    assert sched.queue_depth_points == 4
+    # Plain future.cancel() (no scheduler handle needed) works too:
+    # futures are never marked running before resolution.
+    assert req.future.cancel()
+    assert sched.next_chunk() is None
+    assert sched.queue_depth_points == 0
+    assert req.future.cancelled()
+    assert stats.n_cancelled == 1
+
+
+def test_cancel_unknown_future_is_refused():
+    sched = mk_sched()
+    assert not sched.cancel(Future())
+
+
+def test_cancel_after_completion_is_a_noop():
+    sched = mk_sched()
+    req = mk_req(4)
+    sched.submit(req)
+    picks(sched)
+    mean, var = req.future.result(timeout=0)
+    assert not sched.cancel(req.future)   # already resolved: unknown now
+    np.testing.assert_array_equal(mean, np.arange(4.0))
+    np.testing.assert_array_equal(var, np.arange(4.0) + 0.5)
+
+
+# -- backpressure ------------------------------------------------------
+
+
+def test_bounded_admission_queue_raises_and_recovers():
+    stats = ServerStats()
+    sched = mk_sched(stats=stats, queue_bound=10)
+    sched.submit(mk_req(8))
+    with pytest.raises(AdmissionQueueFull):
+        sched.submit(mk_req(4))          # 8 + 4 > 10
+    assert stats.n_rejected == 1
+    sched.submit(mk_req(2))              # 8 + 2 == 10: exactly at bound
+    item = sched.next_chunk()            # boundary: queue drains into batch
+    assert item is not None
+    assert sched.queue_depth_points == 0
+    sched.submit(mk_req(10))             # room again after admission
+    assert stats.queue_depth_peak == 10
+
+
+def test_max_active_requests_caps_running_batch():
+    sched = mk_sched(max_active_requests=2)
+    reqs = [mk_req(8) for _ in range(4)]   # 2 chunks each
+    for r in reqs:
+        sched.submit(r)
+    first = sched.next_chunk()
+    assert first.request is reqs[0]
+    assert sched.queue_depth_points == 16  # reqs[2:] still queued
+    # Completing the first two requests frees slots for the rest.
+    fake_complete(sched, first)
+    for it in picks(sched):
+        pass
+    assert all(r.future.done() for r in reqs)
+
+
+# -- adaptive window interaction ---------------------------------------
+
+
+def test_idle_window_defers_admission_until_close_or_trip():
+    """Device idle: the (adaptive) batching window applies exactly as in
+    drain mode — admission waits for coalescing partners until the
+    window elapses on the fake clock, max_points trips, or flush()."""
+    clock = FakeClock()
+    window = BatchingPolicy(max_points=100, max_wait_s=0.010)
+    sched = mk_sched(clock=clock, window=window)
+    sched.submit(mk_req(4))
+    assert sched.next_chunk() is None          # window open, device idle
+    clock.advance(0.005)
+    assert sched.next_chunk() is None          # still open
+    clock.advance(0.006)                       # past t_arrival + 10ms
+    assert sched.next_chunk() is not None
+
+    # flush() forces admission with the window still open.
+    sched2 = mk_sched(clock=FakeClock(), window=window)
+    sched2.submit(mk_req(4))
+    assert sched2.next_chunk() is None
+    sched2.flush()
+    assert sched2.next_chunk() is not None
+
+    # max_points trips the window immediately.
+    sched3 = mk_sched(clock=FakeClock(),
+                      window=BatchingPolicy(max_points=8, max_wait_s=30.0))
+    sched3.submit(mk_req(8))
+    assert sched3.next_chunk() is not None
+
+
+def test_busy_device_admits_immediately_despite_window():
+    """The window is an IDLE-only tax: while the running batch is
+    non-empty, a boundary admits new arrivals at once (that is the whole
+    point of continuous batching)."""
+    clock = FakeClock()
+    sched = mk_sched(clock=clock,
+                     window=BatchingPolicy(max_points=100, max_wait_s=30.0))
+    bulk = mk_req(8, slo="bulk")
+    sched.submit(bulk)
+    sched.flush()                              # start the running batch
+    assert sched.next_chunk().request is bulk
+    inter = mk_req(4, slo="interactive")
+    sched.submit(inter)                        # 30s window — but busy
+    assert sched.next_chunk().request is inter
+
+
+def test_adaptive_window_shrinks_with_dense_arrivals():
+    """Adaptive EMA machinery (shared ArrivalWindow) drives the idle
+    gate: dense scripted arrivals shrink the wait to window_factor*EMA,
+    so admission happens earlier than max_wait_s."""
+    clock = FakeClock()
+    window = BatchingPolicy(max_points=10_000, max_wait_s=0.010,
+                            adaptive=True, window_factor=2.0, ema_alpha=1.0)
+    sched = mk_sched(clock=clock, window=window)
+    for _ in range(4):                         # 1ms gaps -> EMA = 1ms
+        sched.submit(mk_req(1))
+        clock.advance(0.001)
+    # Window is now 2ms; the LAST arrival is 1ms old, 1ms to go.
+    assert sched.next_chunk() is None
+    clock.advance(0.0015)
+    assert sched.next_chunk() is not None
+
+
+# -- the parity contract (real compute, scripted schedules) ------------
+
+
+@pytest.fixture(scope="module")
+def problem():
+    x, y, params = paper_synthetic(seed=0, n=80, d=3)
+    cfg = PipelineConfig(bs_pred=4, m_pred=16, chunk_size=8)
+    index = build_train_index(x, y, np.asarray(params.beta), cfg.m_pred,
+                              seed=11)
+    return params, x, y, index, cfg
+
+
+class SchedHarness:
+    """Scripted-arrival executor over the REAL result path: one chunk of
+    real pack+predict per step(), single-threaded, fake-clocked."""
+
+    def __init__(self, problem, seed=11, **policy_kw):
+        self.params, self.x, self.y, self.index, self.cfg = problem
+        self.seed = seed
+        self.clock = FakeClock()
+        self.stats = ServerStats()
+        window = policy_kw.pop("window", BatchingPolicy(max_wait_s=0.0))
+        self.sched = ContinuousScheduler(
+            policy=SchedulerPolicy(**policy_kw), window=window,
+            chunk_size=self.cfg.chunk_size, bs_pred=self.cfg.bs_pred,
+            clock=self.clock, stats=self.stats,
+        )
+
+    def submit(self, xq, slo="interactive"):
+        req = ServeRequest(x=np.asarray(xq, dtype=np.float64),
+                           future=Future(), slo=slo)
+        self.sched.submit(req)
+        return req.future
+
+    def step(self) -> bool:
+        item = self.sched.next_chunk()
+        if item is None:
+            return False
+        packed = pack_scheduled(self.index, self.cfg, item, seed=self.seed)
+        mu, var = packed_predict(self.params, packed, nu=self.cfg.nu,
+                                 backend=self.cfg.backend)
+        self.sched.complete_chunk(item, packed, mu, var)
+        return True
+
+    def drain(self):
+        self.sched.close()
+        while self.step():
+            pass
+
+    def reference(self, xq):
+        ref = predict_sbv(self.params, self.x, self.y, np.asarray(xq),
+                          bs_pred=self.cfg.bs_pred, m_pred=self.cfg.m_pred,
+                          seed=self.seed, chunk_size=self.cfg.chunk_size,
+                          n_sims=2)
+        return np.asarray(ref.mean), np.asarray(ref.var)
+
+    def assert_matches_reference(self, fut, xq):
+        result = fut.result(timeout=0)
+        if isinstance(result, SpoolResultSink):
+            mean, var = result.materialize()
+        else:                       # bare scheduler: plain (mean, var) tuple
+            mean, var = result
+        ref_mean, ref_var = self.reference(xq)
+        np.testing.assert_allclose(mean, ref_mean, rtol=0, atol=1e-12)
+        np.testing.assert_allclose(var, ref_var, rtol=0, atol=1e-12)
+
+
+def test_mid_stream_admission_preserves_per_request_parity(problem):
+    """THE contract: requests admitted mid-stream — interleaved with
+    running bulk chunks, preempting each other — still match their own
+    per-request predict_sbv call to 1e-12, because the scheduler only
+    reorders which chunk runs when."""
+    rng = np.random.default_rng(42)
+    h = SchedHarness(problem)
+    xs, futs = [], []
+
+    def add(n, slo):
+        xq = rng.uniform(size=(n, 3))
+        xs.append(xq)
+        futs.append(h.submit(xq, slo=slo))
+
+    add(20, "bulk")          # 3 chunks
+    assert h.step()          # bulk chunk 0 running
+    add(3, "interactive")    # arrives mid-stream, preempts
+    assert h.step()
+    add(17, "bulk")          # second sweep joins the running batch
+    add(1, "interactive")
+    h.drain()
+    for fut, xq in zip(futs, xs):
+        h.assert_matches_reference(fut, xq)
+    by_class = h.stats.summary()["by_class"]
+    assert by_class["interactive"]["n"] == 2
+    assert by_class["bulk"]["n"] == 2
+
+
+def test_cancellation_mid_stream_leaves_others_exact(problem):
+    rng = np.random.default_rng(43)
+    h = SchedHarness(problem)
+    x_keep = rng.uniform(size=(12, 3))
+    x_dead = rng.uniform(size=(20, 3))
+    fut_keep = h.submit(x_keep, slo="interactive")
+    fut_dead = h.submit(x_dead, slo="bulk")
+    assert h.step()                        # something is in flight
+    h.sched.cancel(fut_dead)
+    h.drain()
+    assert fut_dead.cancelled()
+    h.assert_matches_reference(fut_keep, x_keep)
+
+
+def test_spool_sink_result_roundtrips_exactly(problem, tmp_path):
+    """Bulk results routed through the disk spool reproduce the in-RAM
+    result bit-exactly (float64 .npz round-trip), and cleanup removes
+    every spooled file."""
+    rng = np.random.default_rng(44)
+    h = SchedHarness(problem, spool_threshold=16, spool_dir=str(tmp_path))
+    x_small = rng.uniform(size=(6, 3))     # below threshold: RAM
+    x_big = rng.uniform(size=(30, 3))      # above: spooled, 4 chunks
+    fut_small = h.submit(x_small, slo="interactive")
+    fut_big = h.submit(x_big, slo="bulk")
+    h.drain()
+    h.assert_matches_reference(fut_small, x_small)
+    assert fut_small.result(timeout=0).sink is None \
+        if hasattr(fut_small.result(timeout=0), "sink") else True
+
+    sink = fut_big.result(timeout=0)
+    assert isinstance(sink, SpoolResultSink)
+    assert sink.n_chunks == 4
+    assert sink.spooled_bytes > 0
+    # Bounded-memory read path covers every row exactly once...
+    seen = np.concatenate([idx for idx, _, _ in sink.iter_chunks()])
+    np.testing.assert_array_equal(np.sort(seen), np.arange(30))
+    # ... and materialize() equals the per-request reference to 1e-12.
+    mean, var = sink.materialize()
+    ref_mean, ref_var = h.reference(x_big)
+    np.testing.assert_allclose(mean, ref_mean, rtol=0, atol=1e-12)
+    np.testing.assert_allclose(var, ref_var, rtol=0, atol=1e-12)
+    spooled = [f for f in os.listdir(str(tmp_path) + "/req_000001")]
+    assert spooled
+    sink.cleanup()
+    assert not os.path.exists(str(tmp_path) + "/req_000001")
+
+
+# -- property test: random interleavings (hypothesis) ------------------
+
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=8, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=18),
+                   min_size=1, max_size=4),
+    slos=st.lists(st.sampled_from(["interactive", "bulk"]),
+                  min_size=4, max_size=4),
+    ops=st.lists(st.tuples(st.sampled_from(["step", "submit", "cancel",
+                                            "flush"]),
+                           st.integers(min_value=0, max_value=3)),
+                 max_size=20),
+    data_seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_random_interleavings_match_reference(problem_cached, sizes, slos,
+                                              ops, data_seed):
+    """Property: for ANY interleaving of submit/cancel/flush/step, every
+    non-cancelled request's result equals its own predict_sbv reference,
+    and every future resolves exactly once (no stranded, no double-set —
+    a double set_result would raise InvalidStateError inside the run)."""
+    rng = np.random.default_rng(data_seed)
+    h = SchedHarness(problem_cached)
+    xs = [rng.uniform(size=(n, 3)) for n in sizes]
+    futs = [None] * len(xs)
+    next_submit = 0
+    cancelled = set()
+
+    def do_submit():
+        nonlocal next_submit
+        if next_submit < len(xs):
+            i = next_submit
+            futs[i] = h.submit(xs[i], slo=slos[i % len(slos)])
+            next_submit += 1
+
+    do_submit()
+    for op, k in ops:
+        if op == "submit":
+            do_submit()
+        elif op == "step":
+            h.step()
+        elif op == "flush":
+            h.sched.flush()
+        elif op == "cancel" and k < next_submit:
+            if h.sched.cancel(futs[k]):
+                cancelled.add(k)
+        h.clock.advance(0.001)
+    while next_submit < len(xs):
+        do_submit()
+    h.drain()
+
+    for i, (fut, xq) in enumerate(zip(futs, xs)):
+        assert fut.done()                          # resolved exactly once
+        if fut.cancelled():
+            assert i in cancelled
+        else:
+            h.assert_matches_reference(fut, xq)
+
+
+@pytest.fixture(scope="module")
+def problem_cached(problem):
+    # Warm the jit cache once so hypothesis examples reuse the single
+    # compiled (padded) shape instead of recompiling per example.
+    params, x, y, index, cfg = problem
+    item = SimpleNamespace(
+        entry=SimpleNamespace(req=SimpleNamespace(x=np.zeros((8, 3)))),
+        start=0, stop=8, ci=0)
+    packed = pack_scheduled(index, cfg, item, seed=11)
+    packed_predict(params, packed, nu=cfg.nu, backend=cfg.backend)
+    return problem
+
+
+# -- threaded end-to-end (GPServer in scheduler mode) ------------------
+
+
+def test_server_continuous_mode_end_to_end(problem):
+    """Real threads, real clock: GPServer(config.scheduler=...) serves a
+    mixed SLO workload with a spooled bulk sweep and a cancellation, and
+    every completed request matches its per-request reference."""
+    from repro.serving import GPServer, GPServerConfig
+
+    params, x, y, index, cfg = problem
+    rng = np.random.default_rng(45)
+    config = GPServerConfig(
+        pipeline=cfg,
+        policy=BatchingPolicy(max_points=4096, max_wait_s=0.002),
+        scheduler=SchedulerPolicy(spool_threshold=64, queue_bound=100_000),
+        seed=11,
+    )
+    server = GPServer(params, x, y, config)
+    reqs = [(rng.uniform(size=(n, 3)), slo)
+            for n, slo in [(5, "interactive"), (70, "bulk"),
+                           (2, "interactive"), (12, "interactive")]]
+    with server:
+        futs = [server.submit(xq, slo=slo) for xq, slo in reqs]
+        victim = server.submit(rng.uniform(size=(40, 3)), slo="bulk")
+        assert server.cancel(victim)
+        server.flush()
+        results = [f.result(timeout=600) for f in futs]
+
+    assert victim.cancelled()
+    for (xq, _slo), res in zip(reqs, results):
+        ref = predict_sbv(params, x, y, xq, bs_pred=cfg.bs_pred,
+                          m_pred=cfg.m_pred, seed=11,
+                          chunk_size=cfg.chunk_size, n_sims=2)
+        if res.sink is not None:
+            mean, var = res.sink.materialize()
+            res.sink.cleanup()
+        else:
+            mean, var = res.mean, res.var
+        np.testing.assert_allclose(mean, np.asarray(ref.mean),
+                                   rtol=0, atol=1e-12)
+        np.testing.assert_allclose(var, np.asarray(ref.var),
+                                   rtol=0, atol=1e-12)
+    summary = server.stats.summary()
+    assert summary["n_cancelled"] == 1
+    assert summary["by_class"]["interactive"]["n"] == 3
+    assert summary["by_class"]["bulk"]["n"] == 1
+    assert summary["by_class"]["interactive"]["latency_p99_s"] > 0

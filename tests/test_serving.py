@@ -11,6 +11,8 @@ Contracts (ISSUE satellite):
 (e) latency smoke: a batch is answered under a generous wall-clock bound
     (the CI serving gate).
 """
+import threading
+
 import numpy as np
 import pytest
 
@@ -127,6 +129,47 @@ def test_max_points_policy_splits_batches_and_stays_exact():
         em, ev = exact_predict(params, x, y, req)
         np.testing.assert_allclose(res.mean, np.asarray(em), atol=1e-4, rtol=0)
         np.testing.assert_allclose(res.var, np.asarray(ev), atol=1e-4, rtol=0)
+
+
+def test_stop_timeout_fails_queued_futures():
+    """Regression: stop() used to raise TimeoutError while still-queued
+    requests kept their futures pending forever. Now every queued future
+    is failed BEFORE the TimeoutError propagates, so no client blocks on
+    a request the wedged dispatcher will never pick up."""
+    x, y, params = paper_synthetic(seed=9, n=40, d=2)
+    cfg = GPServerConfig(
+        pipeline=PipelineConfig(bs_pred=4, m_pred=16, chunk_size=None),
+        # max_points=1: every submit trips the window -> one request per
+        # batch, so the second submit stays queued behind the wedged first.
+        policy=BatchingPolicy(max_points=1, max_wait_s=30.0),
+        seed=9,
+    )
+    server = GPServer(params, x, y, cfg)
+    entered, release = threading.Event(), threading.Event()
+
+    def wedged_process(batch):
+        entered.set()
+        release.wait(timeout=60.0)
+        for req in batch:
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_result("late")
+
+    server._process = wedged_process
+    server.start()
+    rng = np.random.default_rng(0)
+    fut1 = server.submit(rng.uniform(size=(2, 2)))
+    assert entered.wait(timeout=30.0)          # dispatcher wedged on req 1
+    fut2 = server.submit(rng.uniform(size=(2, 2)))
+
+    with pytest.raises(TimeoutError):
+        server.stop(timeout_s=0.2)
+    # The queued future fails promptly instead of hanging forever.
+    with pytest.raises(RuntimeError, match="timed out"):
+        fut2.result(timeout=5.0)
+
+    release.set()                              # un-wedge; clean shutdown
+    server.stop(timeout_s=60.0)
+    assert fut1.result(timeout=5.0) == "late"
 
 
 def test_latency_smoke_and_telemetry(problem):
