@@ -153,6 +153,38 @@ def restore_train_state(path: str, template, shardings=None):
     return state, manifest
 
 
+_TUNING_RECORD = "tuning_record.json"
+
+
+def save_tuning_record(directory: str, record: dict) -> str:
+    """Atomically persist an autotuner record (a plain JSON-serializable
+    dict — ``repro.tuning.TuningRecord.to_dict()``) next to the
+    checkpoints, so a later ``fit_sbv``/``predict_sbv``/``GPServer``
+    starts pre-tuned without re-measuring. Same tmp+rename discipline as
+    ``save_checkpoint``: a crash mid-write never corrupts the record."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, _TUNING_RECORD)
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    return final
+
+
+def load_tuning_record(directory: str) -> dict | None:
+    """Record dict from a checkpoint directory (or a direct path to the
+    json file); ``None`` when absent."""
+    path = directory
+    if os.path.isdir(path):
+        path = os.path.join(path, _TUNING_RECORD)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 def latest_checkpoint(directory: str) -> str | None:
     if not os.path.isdir(directory):
         return None

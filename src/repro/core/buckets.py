@@ -30,13 +30,16 @@ from .packing import (
 )
 
 
-def bucket_mults(backend: str) -> tuple[int, int]:
+def bucket_mults(backend: str, precision: str | None = None) -> tuple[int, int]:
     """(bs_mult, m_mult) bucket-ceiling alignment for a kernel backend.
 
     The compiled TPU path wants 8x128-aligned shapes (see
-    ``packing.tile_predict_shapes``); everything else buckets to exact
-    geometric ceilings."""
+    ``packing.tile_predict_shapes``) — doubled to 16x128 on the bf16
+    assembly tier, whose native tile is (16, 128); everything else
+    buckets to exact geometric ceilings."""
     if backend == "pallas_tiled":
+        if precision == "bf16":
+            return 2 * TILE_SUBLANE, TILE_LANE
         return TILE_SUBLANE, TILE_LANE
     return 1, 1
 
@@ -238,6 +241,159 @@ def bucket_blocks(
         ))
         ranks.append(idx)
     return BucketedBlocks(buckets=buckets, ranks=ranks)
+
+
+# --------------------------------------------------------------------------
+# Mixed-precision ladder (docs/precision.md)
+#
+# A ladder TIER names the covariance-ASSEMBLY storage dtype; accumulation
+# (distance GEMM, Cholesky, solves, logdet) always runs at least at f32:
+#
+#     tier    coords stored/assembled    y/masks/params + accumulation
+#     bf16    bfloat16                   float32
+#     f32     float32                    float32
+#     f64     float64                    float64
+#
+# Only the coordinates narrow — they are the covariance assembly's inputs
+# and the bulk of the packed bytes ((bs+m) x d vs (bs+m) per block) — so a
+# bf16 bucket halves its coordinate traffic and feeds the MXU's native
+# bf16xbf16->f32 GEMM while the factorization stays in f32.
+
+LADDER = ("bf16", "f32", "f64")  # narrowest -> widest demotion order
+
+# Default per-tier relative nll error budgets vs the f64 reference.
+# f32's bound is the parity class the pallas-vs-ref harness already pins
+# (1e-6); bf16 coordinate rounding (~4e-3 relative) bounds the assembly
+# error class the paper's low-precision MAGMA path accepts.
+_TIER_BUDGETS = {"bf16": 5e-3, "f32": 1e-6, "f64": 0.0}
+
+
+def storage_dtype(tier: str):
+    """Coordinate (assembly) dtype of a ladder tier."""
+    import jax.numpy as jnp
+
+    return {"bf16": jnp.bfloat16, "f32": np.float32, "f64": np.float64}[tier]
+
+
+def acc_dtype(tier: str):
+    """Accumulation dtype of a ladder tier (observations/masks/params)."""
+    return {"bf16": np.float32, "f32": np.float32, "f64": np.float64}[tier]
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-bucket precision selection for the likelihood/prediction ladder.
+
+    ``tier`` is the REQUESTED assembly tier; with ``probe=True`` (the
+    default), ``assign_precision`` evaluates each bucket's nll at the
+    candidate tier through the same masked-lane packed program the fit
+    runs, compares against the f64 reference, and demotes the bucket one
+    rung at a time (bf16 -> f32 -> f64) until the relative error fits the
+    tier's budget — so whatever ends up running IS within budget by
+    construction. ``error_budget`` overrides the per-tier defaults
+    (``_TIER_BUDGETS``) with one hard bound for every rung: e.g.
+    ``PrecisionPolicy("bf16", error_budget=1e-6)`` only keeps bf16
+    buckets that happen to meet f32-class parity and silently runs the
+    rest at f32."""
+
+    tier: str = "f32"
+    error_budget: float | None = None
+    probe: bool = True
+
+    def __post_init__(self):
+        if self.tier not in LADDER:
+            raise ValueError(f"unknown precision tier {self.tier!r}; "
+                             f"expected one of {LADDER}")
+
+    def budget_for(self, tier: str) -> float:
+        if self.error_budget is not None:
+            return float(self.error_budget)
+        return _TIER_BUDGETS[tier]
+
+
+def as_policy(precision) -> "PrecisionPolicy":
+    """Coerce a tier name / None / policy into a ``PrecisionPolicy``."""
+    if precision is None:
+        return PrecisionPolicy(tier="f64", probe=False)
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    return PrecisionPolicy(tier=str(precision))
+
+
+def cast_packed(pk: PackedBlocks, tier: str) -> PackedBlocks:
+    """Cast one likelihood bucket to a ladder tier: coordinates to the
+    tier's storage dtype, observations to its accumulation dtype; boolean
+    masks and owners are untouched."""
+    st, ac = storage_dtype(tier), acc_dtype(tier)
+    return PackedBlocks(
+        blk_x=np.asarray(pk.blk_x, dtype=st),
+        blk_y=np.asarray(pk.blk_y, dtype=ac),
+        blk_mask=pk.blk_mask,
+        nn_x=np.asarray(pk.nn_x, dtype=st),
+        nn_y=np.asarray(pk.nn_y, dtype=ac),
+        nn_mask=pk.nn_mask,
+        owners=pk.owners,
+    )
+
+
+def cast_prediction(pk: PackedPrediction, tier: str) -> PackedPrediction:
+    """Prediction twin of ``cast_packed`` (q_idx stays integral)."""
+    st, ac = storage_dtype(tier), acc_dtype(tier)
+    return PackedPrediction(
+        q_x=np.asarray(pk.q_x, dtype=st),
+        q_mask=pk.q_mask,
+        q_idx=pk.q_idx,
+        nn_x=np.asarray(pk.nn_x, dtype=st),
+        nn_y=np.asarray(pk.nn_y, dtype=ac),
+        nn_mask=pk.nn_mask,
+        owners=pk.owners,
+    )
+
+
+def assign_precision(params, bucketed, policy: PrecisionPolicy,
+                     nu: float = 3.5, backend: str = "ref") -> list:
+    """Per-bucket ladder tiers under ``policy``, enforced by probing.
+
+    Accepts a ``BucketedBlocks`` or a single ``PackedBlocks`` (treated as
+    one bucket). For every bucket the candidate tier's nll runs through
+    ``packed_loglik`` — the identical masked-lane program the fit uses —
+    and is compared against the f64 reference; over-budget buckets demote
+    one rung at a time. Returns tier names aligned with
+    ``bucketed.buckets`` (probing is a handful of likelihood evaluations,
+    paid once per structure refresh, not per optimizer step)."""
+    from .vecchia import packed_loglik
+
+    buckets = bucketed.buckets if isinstance(bucketed, BucketedBlocks) \
+        else [bucketed]
+    tiers = []
+    for pk in buckets:
+        tier = policy.tier
+        if tier == "f64" or not policy.probe:
+            tiers.append(tier)
+            continue
+        ref = float(packed_loglik(params, cast_packed(pk, "f64"),
+                                  nu=nu, backend=backend))
+        denom = max(1.0, abs(ref))
+        while tier != "f64":
+            got = float(packed_loglik(params, cast_packed(pk, tier),
+                                      nu=nu, backend=backend))
+            if abs(got - ref) / denom <= policy.budget_for(tier):
+                break
+            tier = LADDER[LADDER.index(tier) + 1]
+        tiers.append(tier)
+    return tiers
+
+
+def apply_precision(bucketed: BucketedBlocks, tiers) -> BucketedBlocks:
+    """Cast every bucket to its assigned tier (see ``assign_precision``)."""
+    if isinstance(tiers, str):
+        tiers = [tiers] * bucketed.n_buckets
+    if len(tiers) != bucketed.n_buckets:
+        raise ValueError(f"{len(tiers)} tiers for {bucketed.n_buckets} buckets")
+    return BucketedBlocks(
+        buckets=[cast_packed(pk, t) for pk, t in zip(bucketed.buckets, tiers)],
+        ranks=bucketed.ranks,
+    )
 
 
 def bucket_prediction(

@@ -34,6 +34,7 @@ class FitResult:
     history: list = field(default_factory=list)  # (outer, inner, -loglik/n)
     packed: object = None
     stream_stats: dict | None = None  # set by the streaming (out-of-core) path
+    precision_tiers: list | None = None  # per-bucket ladder tiers (last round)
 
 
 def neg_loglik_fn(packed, nu: float, backend: str):
@@ -64,8 +65,14 @@ def _chunk_loglik(nu: float, backend: str):
 
     def ll(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
         if backend == "ref":
+            from .kernels_math import cast_params
+
+            # Precision ladder: the piece's observation dtype is its
+            # accumulation dtype (docs/precision.md); a no-op for the
+            # default f64 spool layout.
+            p = cast_params(params, jnp.asarray(blk_y).dtype)
             body = jax.checkpoint(
-                lambda a: _block_loglik_joint_one(params, nu, *a)
+                lambda a: _block_loglik_joint_one(p, nu, *a)
             )
             per_block = jax.lax.map(
                 body, (blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask),
@@ -145,6 +152,7 @@ def _fit_sbv_streaming(
     store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
     stream_chunk, n_buckets, spool_dir, distributed=None,
     device_cache: int | None = None, prefetch: int = 2, multihost=None,
+    precision=None,
 ):
     """Out-of-core fit: every pass holds ~``stream_chunk`` data rows.
 
@@ -204,8 +212,20 @@ def _fit_sbv_streaming(
         return _fit_sbv_multihost(
             store, cfg, init, nu, lr, inner_steps, outer_rounds, backend,
             verbose, stream_chunk, spool_dir, multihost,
-            device_cache=device_cache, prefetch=prefetch,
+            device_cache=device_cache, prefetch=prefetch, precision=precision,
         )
+
+    # Streaming precision is UNIFORM (no per-piece probing: the probe's
+    # f64 reference would double every round's disk traffic); pieces are
+    # cast to the policy tier before spooling, so the spool, the H2D
+    # stage, and the device cache all carry the narrow layout.
+    tier = None
+    if precision is not None:
+        from .buckets import as_policy
+
+        pol = as_policy(precision)
+        if pol.tier != "f64":
+            tier = pol.tier
 
     mesh = axis = sharding = None
     n_shards = 1
@@ -230,7 +250,8 @@ def _fit_sbv_streaming(
              "spool_bytes": 0, "bs_max": 0, "bc": 0, "n_shards": n_shards,
              "device_cached_pieces": 0, "device_cached_bytes": 0,
              "h2d_bytes_per_step": 0, "inner_steps_total": 0,
-             "inner_time_s": 0.0}
+             "inner_time_s": 0.0, "precision": tier or "f64",
+             "device_cache_budget": 0}
 
     for outer in range(outer_rounds):
         beta_np = np.asarray(params.beta)
@@ -266,11 +287,16 @@ def _fit_sbv_streaming(
 
         if device_cache is None:
             # Auto budget: free device memory minus the grad live-set
-            # reserve (the working_set_model device_grad term).
-            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * 8
+            # reserve (the working_set_model device_grad term). The
+            # reserve is PRECISION-AWARE: reduced tiers accumulate in
+            # f32, so the backward live set is half the f64 bytes — the
+            # freed reserve goes straight to the device-resident cache.
+            acc_bytes = 4 if tier else int(np.dtype(cfg.dtype).itemsize)
+            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * acc_bytes
             budget = device_cache_budget(reserve_bytes=reserve)
         else:
             budget = int(device_cache)
+        stats["device_cache_budget"] = max(stats["device_cache_budget"], budget)
         work_dir = spool_dir or tempfile.mkdtemp(prefix="sbv-spool-")
         spool = PackedChunkSpool(os.path.join(work_dir, f"round{outer}"),
                                  device_budget=budget, sharding=sharding)
@@ -294,6 +320,10 @@ def _fit_sbv_streaming(
                 else:
                     pieces = [packed.pad_to_blocks(bc_pad)]
                 for p in pieces:
+                    if tier:
+                        from .buckets import cast_packed
+
+                        p = cast_packed(p, tier)
                     if n_shards > 1:
                         # owner-contiguous reorder; bc already divides the
                         # shard count, so the shape is unchanged
@@ -343,7 +373,7 @@ def _fit_sbv_streaming(
 def _fit_sbv_multihost(
     store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
     stream_chunk, spool_dir, comm, device_cache: int | None = None,
-    prefetch: int = 2,
+    prefetch: int = 2, precision=None,
 ):
     """Multi-process streaming fit: one `jax.distributed` host per
     partition, construction and packing per host, one `[loss, grad]`
@@ -361,6 +391,13 @@ def _fit_sbv_multihost(
 
     pstore = (store if isinstance(store, PartitionedStore)
               else PartitionedStore(store, comm.size, comm.rank))
+    tier = None
+    if precision is not None:
+        from .buckets import as_policy
+
+        pol = as_policy(precision)
+        if pol.tier != "f64":
+            tier = pol.tier
     n, d = pstore.n_rows, pstore.d
     if init is None:
         _, var_y = streaming_moments(pstore, comm=comm)
@@ -375,7 +412,8 @@ def _fit_sbv_multihost(
              "device_cached_pieces": 0, "device_cached_bytes": 0,
              "h2d_bytes_per_step": 0, "inner_steps_total": 0,
              "inner_time_s": 0.0, "n_hosts": comm.size, "rank": comm.rank,
-             "lockstep_chunks": 0, "allreduce_scalars_per_chunk": 1 + n_param}
+             "lockstep_chunks": 0, "allreduce_scalars_per_chunk": 1 + n_param,
+             "precision": tier or "f64", "device_cache_budget": 0}
 
     for outer in range(outer_rounds):
         beta_np = np.asarray(params.beta)
@@ -386,10 +424,12 @@ def _fit_sbv_multihost(
         bc_pad = max((len(r) for r in struct.plan), default=1)
 
         if device_cache is None:
-            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * 8
+            acc_bytes = 4 if tier else int(np.dtype(cfg.dtype).itemsize)
+            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * acc_bytes
             budget = device_cache_budget(reserve_bytes=reserve)
         else:
             budget = int(device_cache)
+        stats["device_cache_budget"] = max(stats["device_cache_budget"], budget)
         work_dir = spool_dir or tempfile.mkdtemp(prefix="sbv-spool-")
         spool = PackedChunkSpool(
             os.path.join(work_dir, f"rank{comm.rank}-round{outer}"),
@@ -401,6 +441,10 @@ def _fit_sbv_multihost(
                     m=cfg.m, bs_max=struct.bs_max, dtype=cfg.dtype,
                 )
                 piece = packed.pad_to_blocks(bc_pad)
+                if tier:
+                    from .buckets import cast_packed
+
+                    piece = cast_packed(piece, tier)
                 spool.add(piece, tag=_piece_backend(backend, piece))
             # Hosts iterate the SAME number of lockstep chunk slots per
             # step; hosts out of local pieces contribute zeros.
@@ -475,6 +519,8 @@ def fit_sbv(
     device_cache: int | None = None,
     prefetch: int = 2,
     multihost=None,  # host comm (repro.multihost) for the multi-process fit
+    precision=None,  # ladder tier name or core.buckets.PrecisionPolicy
+    tuning=None,     # TuningRecord (or its directory/path) from repro.tuning
 ) -> FitResult:
     """Maximum-likelihood fit of (sigma^2, beta, nugget) with fixed nu.
 
@@ -501,11 +547,33 @@ def fit_sbv(
     ``repro.multihost``) runs the MULTI-PROCESS streaming fit: each
     ``jax.distributed`` process builds, packs, and spools only its own
     row partition and the hosts all-reduce ``[loss, grad]`` once per
-    chunk per step (docs/streaming.md "multi-host construction")."""
+    chunk per step (docs/streaming.md "multi-host construction").
+
+    ``precision`` selects the mixed-precision ladder (docs/precision.md):
+    a tier name (``'bf16'``/``'f32'``/``'f64'``) or a
+    ``core.buckets.PrecisionPolicy``. In-core fits probe each bucket
+    against the f64 reference every structure refresh and demote
+    over-budget buckets; streaming fits cast uniformly to the policy
+    tier. ``tuning`` pre-loads an autotuned configuration (a
+    ``repro.tuning.TuningRecord`` or a checkpoint directory holding one):
+    it fills ``n_buckets``/``stream_chunk``/``precision`` when the caller
+    left them unset, and ``backend`` when it is ``'auto'``."""
     from repro.data.store import as_store, is_store
 
     if cfg is None:
         raise TypeError("fit_sbv requires an SBVConfig")
+    if tuning is not None:
+        from repro.tuning import as_record
+
+        rec = as_record(tuning)
+        if n_buckets is None:
+            n_buckets = rec.n_buckets
+        if stream_chunk is None and rec.stream_chunk:
+            stream_chunk = rec.stream_chunk
+        if precision is None and rec.precision:
+            precision = rec.precision_policy()
+        if backend == "auto" and rec.backend:
+            backend = rec.backend
     if multihost is not None and not (is_store(x) or stream_chunk is not None):
         raise ValueError("multihost= requires the streaming path: pass a "
                          "row store and/or set stream_chunk")
@@ -517,12 +585,20 @@ def fit_sbv(
             store, cfg, init, nu, lr, inner_steps, outer_rounds, backend,
             verbose, stream_chunk or DEFAULT_STRUCT_BATCH, n_buckets, spool_dir,
             distributed=distributed, device_cache=device_cache,
-            prefetch=prefetch, multihost=multihost,
+            prefetch=prefetch, multihost=multihost, precision=precision,
         )
+    policy = None
+    if precision is not None:
+        from .buckets import as_policy
+
+        policy = as_policy(precision)
+        if policy.tier == "f64" and not policy.probe:
+            policy = None
     d = x.shape[1]
     params = init or KernelParams.create(sigma2=float(np.var(y)), beta=0.5, nugget=1e-3, d=d)
     history = []
     packed = None
+    tiers = None
 
     for outer in range(outer_rounds):
         beta_np = np.asarray(params.beta)
@@ -531,6 +607,18 @@ def fit_sbv(
             from .buckets import bucket_blocks
 
             packed = bucket_blocks(packed, n_buckets=n_buckets)
+        if policy is not None:
+            # Probe-and-demote at the CURRENT params, re-assigned every
+            # structure refresh (re-clustering reshapes the buckets).
+            from .buckets import (apply_precision, assign_precision,
+                                  BucketedBlocks, cast_packed)
+
+            tiers = assign_precision(params, packed, policy, nu=nu,
+                                     backend=backend)
+            if isinstance(packed, BucketedBlocks):
+                packed = apply_precision(packed, tiers)
+            else:
+                packed = cast_packed(packed, tiers[0])
         if distributed is not None:
             from .distributed import distributed_neg_loglik_fn
 
@@ -546,7 +634,8 @@ def fit_sbv(
             history.append((outer, it, float(loss)))
             if verbose and it % 10 == 0:
                 print(f"[fit] outer={outer} it={it} nll/n={float(loss):.6f}")
-    return FitResult(params=params, history=history, packed=packed)
+    return FitResult(params=params, history=history, packed=packed,
+                     precision_tiers=tiers)
 
 
 def fit_neldermead(

@@ -51,6 +51,20 @@ class KernelParams(NamedTuple):
         )
 
 
+def cast_params(params: KernelParams, dtype) -> KernelParams:
+    """Cast the log-space parameters to an accumulation dtype.
+
+    Differentiable (astype has a well-defined VJP), so a reduced-precision
+    likelihood still yields full-precision gradients w.r.t. the caller's
+    f64 master parameters — the mixed-precision optimizer contract of
+    docs/precision.md."""
+    return KernelParams(
+        log_sigma2=jnp.asarray(params.log_sigma2).astype(dtype),
+        log_beta=jnp.asarray(params.log_beta).astype(dtype),
+        log_nugget=jnp.asarray(params.log_nugget).astype(dtype),
+    )
+
+
 def matern(r: jax.Array, nu: float) -> jax.Array:
     """Normalized half-integer Matérn correlation: 2^{1-nu}/Gamma(nu) r^nu K_nu(r).
 

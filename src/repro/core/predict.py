@@ -312,6 +312,8 @@ def predict_sbv(
     dtype=np.float64,
     n_buckets: int | None = None,
     stream_chunk: int | None = None,
+    precision=None,
+    tuning=None,
 ) -> Prediction:
     """Packed block prediction over the full test set.
 
@@ -328,8 +330,38 @@ def predict_sbv(
     may be row stores; ``stream_chunk`` selects the streaming training
     index (docs/streaming.md). In-core arrays with ``stream_chunk`` take
     the identical code path, so store-backed and in-core streaming
-    predictions agree bitwise on the same rows."""
+    predictions agree bitwise on the same rows.
+
+    ``precision`` picks a ladder tier (str or PrecisionPolicy,
+    docs/precision.md): coordinates pack at the tier's storage dtype and
+    all conditional math runs at its accumulation dtype. Unlike the fit
+    there is no per-chunk probe — budget enforcement happens at fit/tune
+    time (``assign_precision`` / the autotuner); pass the fitted tier.
+    ``tuning`` (TuningRecord / dict / checkpoint path) fills n_buckets,
+    stream_chunk, and precision when unset, and backend when 'auto'."""
     from repro.data.store import is_store
+
+    if tuning is not None:
+        from repro.tuning import as_record
+
+        rec = as_record(tuning)
+        if n_buckets is None:
+            n_buckets = rec.n_buckets
+        if stream_chunk is None and rec.stream_chunk:
+            stream_chunk = rec.stream_chunk
+        if precision is None and rec.precision:
+            precision = rec.precision
+        if backend == "auto" and rec.backend:
+            backend = rec.backend
+
+    tier = None
+    if precision is not None:
+        from .buckets import acc_dtype, as_policy
+
+        pol = as_policy(precision)
+        if pol.tier != "f64":
+            tier = pol.tier
+            dtype = acc_dtype(tier)  # queries pack at the accumulation width
 
     beta = np.asarray(params.beta if beta_struct is None else beta_struct)
     if is_store(x_test):
@@ -355,12 +387,16 @@ def predict_sbv(
         if n_buckets:
             from .buckets import bucket_mults, bucket_prediction
 
-            bs_mult, m_mult = bucket_mults(backend)
+            bs_mult, m_mult = bucket_mults(backend, precision=tier)
             pieces = bucket_prediction(
                 packed, n_buckets=n_buckets, bs_mult=bs_mult, m_mult=m_mult,
             ).buckets
         else:
             pieces = [packed]
+        if tier is not None:
+            from .buckets import cast_prediction
+
+            pieces = [cast_prediction(p, tier) for p in pieces]
         key_c = jax.random.fold_in(key, ci)
         for bi, piece in enumerate(pieces):
             # Uniform path keeps the pre-bucketing key stream (bit-stable

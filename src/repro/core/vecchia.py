@@ -34,7 +34,13 @@ _LOG2PI = float(jnp.log(2.0 * jnp.pi))
 def _masked_cov(xa, xb, mask_a, mask_b, params, nu, *, identity: bool):
     """Covariance with masked rows/cols zeroed; optionally unit diagonal on
     padded entries (only valid when xa is xb and masks coincide)."""
-    r = jnp.sqrt(scaled_sqdist(xa, xb, params.beta) + 1e-300)
+    d2 = scaled_sqdist(xa, xb, params.beta)
+    # The sqrt-at-zero gradient guard must not underflow to 0.0 in the
+    # dtype actually computing (1e-300 does in f32, reintroducing the
+    # 0 * inf = NaN it exists to prevent); f64 keeps the historical value
+    # so f64 results stay bitwise unchanged.
+    eps = 1e-300 if d2.dtype == jnp.float64 else 1e-30
+    r = jnp.sqrt(d2 + eps)
     k = params.sigma2 * matern(r, nu)
     mm = mask_a[:, None] & mask_b[None, :]
     k = jnp.where(mm, k, 0.0)
@@ -162,8 +168,16 @@ def packed_loglik(params: KernelParams, packed, nu: float = 3.5, backend: str = 
             packed.bs_max, packed.m, kind="loglik", dtype=packed.blk_x.dtype
         )
     if backend == "ref":
+        # Precision ladder: the packed observation dtype is the
+        # accumulation dtype (docs/precision.md). Casting the params down
+        # keeps the vmapped program at that width instead of silently
+        # promoting everything back to f64; a no-op for the default f64
+        # layout. Differentiable — f64 master params get f64 gradients.
+        from .kernels_math import cast_params
+
+        acc = jnp.asarray(packed.blk_y).dtype
         return batched_block_loglik(
-            params,
+            cast_params(params, acc),
             jnp.asarray(packed.blk_x), jnp.asarray(packed.blk_y), jnp.asarray(packed.blk_mask),
             jnp.asarray(packed.nn_x), jnp.asarray(packed.nn_y), jnp.asarray(packed.nn_mask),
             nu=nu,

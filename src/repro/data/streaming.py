@@ -417,6 +417,34 @@ def pack_block_chunk(
 _SPOOL_KEYS = ("blk_x", "blk_y", "blk_mask", "nn_x", "nn_y", "nn_mask")
 
 
+def _npz_encode(items: dict) -> dict:
+    """npz-safe view of a named-array bundle.
+
+    ``np.savez`` silently stores ml_dtypes bfloat16 as a void dtype that
+    cannot be read back, so bf16 arrays (the precision ladder's narrow
+    coordinate tier, docs/precision.md) are spooled as their uint16 bit
+    pattern under a ``__bf16__<name>`` flag key — the same convention as
+    ckpt/checkpoint.py — and re-viewed on load. Bit-exact round trip."""
+    import ml_dtypes
+
+    out = {}
+    for k, a in items.items():
+        if a.dtype == ml_dtypes.bfloat16:
+            out[f"__bf16__{k}"] = a.view(np.uint16)
+        else:
+            out[k] = a
+    return out
+
+
+def _npz_read(z, k: str) -> np.ndarray:
+    """Read one array from an npz written via ``_npz_encode``."""
+    if k in z:
+        return z[k]
+    import ml_dtypes
+
+    return z[f"__bf16__{k}"].view(ml_dtypes.bfloat16)
+
+
 def _host_available_bytes() -> int | None:
     """MemAvailable from /proc/meminfo (the CPU backend's 'free HBM')."""
     try:
@@ -537,7 +565,7 @@ class PackedChunkSpool:
             self._made_dir = True
         f = os.path.join(self.path, f"chunk_{len(self._entries):05d}.npz")
         np.savez(f, owners=packed.owners,
-                 **{k: a for k, a in zip(_SPOOL_KEYS, arrs)})
+                 **_npz_encode({k: a for k, a in zip(_SPOOL_KEYS, arrs)}))
         self._entries.append(("disk", f, tag, nbytes, None))
         self.disk_bytes_total += nbytes
 
@@ -561,7 +589,7 @@ class PackedChunkSpool:
             os.makedirs(self.path, exist_ok=True)
             self._made_dir = True
         f = os.path.join(self.path, f"chunk_{len(self._entries):05d}.npz")
-        np.savez(f, **items)
+        np.savez(f, **_npz_encode(items))
         self._entries.append(("disk", f, tag, nbytes, keys))
         self.disk_bytes_total += nbytes
 
@@ -576,8 +604,9 @@ class PackedChunkSpool:
             return payload, tag
         with np.load(payload) as z:
             if keys is None:
-                return tuple(self._put_device(z[k]) for k in _SPOOL_KEYS), tag
-            return {k: self._put_device(z[k]) for k in keys}, tag
+                return tuple(self._put_device(_npz_read(z, k))
+                             for k in _SPOOL_KEYS), tag
+            return {k: self._put_device(_npz_read(z, k)) for k in keys}, tag
 
     def iter_arrays(self, prefetch: int = 2):
         """Yield ``(arrays, tag)`` per piece, in add order.
@@ -1276,10 +1305,16 @@ def working_set_model(stream_stats: dict, n_rows: int, d: int, m: int,
 
     st = stream_stats
     joint2 = (st["bs_max"] + m) ** 2
+    # The backward live set is sized by the run's ACCUMULATION dtype
+    # (docs/precision.md): reduced ladder tiers (bf16/f32) accumulate in
+    # f32, halving the device-grad term; the packed-chunk term needs no
+    # adjustment because packed_chunk_bytes_max is measured on the
+    # already-cast pieces.
+    acc_bytes = 4 if st.get("precision", "f64") in ("bf16", "f32") else 8
     terms = {
         "chunk_windows": 3 * stream_chunk * (d + 1) * 8,
         "packed_chunk": 4 * st["packed_chunk_bytes_max"],
-        "device_grad": 16 * _MAP_BATCH * joint2 * 8,
+        "device_grad": 16 * _MAP_BATCH * joint2 * acc_bytes,
         "nns_scan": 3 * n_rows * d * 8,
         "index_arrays": 4 * n_rows * 8 + st["bc"] * m * 8,
         "gather_caches": n_caches * (32 << 20),

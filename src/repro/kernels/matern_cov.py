@@ -17,15 +17,29 @@ from jax.experimental import pallas as pl
 from .sbv_loglik import _matern_poly
 
 
-def _cov_kernel(xa_ref, xb_ref, beta_ref, scal_ref, out_ref, *, nu: float):
-    beta = beta_ref[...]
+def _cov_kernel(xa_ref, xb_ref, beta_ref, scal_ref, out_ref, *, nu: float,
+                narrow_gemm: bool = False):
+    beta = beta_ref[...]             # accumulation dtype
     sigma2 = scal_ref[0]
-    za = xa_ref[0] / beta            # (TN, d)
-    zb = xb_ref[0] / beta            # (TM, d)
+    acc = beta.dtype
+    xa = xa_ref[0]
+    xb = xb_ref[0]
+    # Assembly at the coords' storage width, accumulation in ``acc``
+    # (precision ladder; docs/precision.md) — identical to the legacy
+    # single-dtype path when the inputs all share one dtype. The GEMM
+    # operands stay narrow only on hardware (``narrow_gemm``): interpret
+    # mode's dot rounds at the operand width instead of honoring the
+    # f32 accumulation, so it upcasts to reproduce MXU numerics (see
+    # sbv_loglik._masked_cov_tile).
+    za = xa / beta.astype(xa.dtype)  # (TN, d)
+    zb = xb / beta.astype(xb.dtype)  # (TM, d)
+    za_a = za.astype(acc)
+    zb_a = zb.astype(acc)
+    ga, gb = (za, zb) if narrow_gemm else (za_a, zb_a)
     d2 = (
-        jnp.sum(za * za, axis=-1)[:, None]
-        + jnp.sum(zb * zb, axis=-1)[None, :]
-        - 2.0 * jnp.dot(za, zb.T, preferred_element_type=za.dtype)
+        jnp.sum(za_a * za_a, axis=-1)[:, None]
+        + jnp.sum(zb_a * zb_a, axis=-1)[None, :]
+        - 2.0 * jnp.dot(ga, gb.T, preferred_element_type=acc)
     )
     r = jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-30)
     out_ref[0] = sigma2 * _matern_poly(r, nu)
@@ -39,12 +53,15 @@ def matern_cov_pallas(
     tile_m: int = 128,
     interpret: bool | None = None,
 ):
-    """Batched covariance: xa (B, na, d), xb (B, nb, d) -> (B, na, nb)."""
+    """Batched covariance: xa (B, na, d), xb (B, nb, d) -> (B, na, nb).
+
+    bf16 coords run bf16-assembly with f32 accumulation and an f32
+    output; any other dtype keeps the legacy single-dtype behavior."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, na, d = xa.shape
     nb = xb.shape[1]
-    dtype = xa.dtype
+    dtype = jnp.float32 if xa.dtype == jnp.bfloat16 else xa.dtype
     tn = min(tile_n, na)
     tm = min(tile_m, nb)
     # Pad to tile multiples; padded coords are zeros — results cropped below.
@@ -60,7 +77,7 @@ def matern_cov_pallas(
     beta = jnp.asarray(beta, dtype)
 
     out = pl.pallas_call(
-        functools.partial(_cov_kernel, nu=nu),
+        functools.partial(_cov_kernel, nu=nu, narrow_gemm=not interpret),
         grid=(b, gn, gm),
         in_specs=[
             pl.BlockSpec((1, tn, d), lambda i, j, k: (i, j, 0)),

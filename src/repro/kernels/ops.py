@@ -21,6 +21,19 @@ from .sbv_loglik import sbv_loglik_pallas
 from .sbv_predict import sbv_predict_pallas, sbv_predict_tiled
 
 
+def ladder_dtypes(dtype):
+    """(assembly, accumulation) dtypes for a storage dtype on the ladder.
+
+    bf16 coordinates assemble at bf16 and accumulate in f32 (the MXU's
+    native mixed-precision GEMM); f32/f64 storage accumulates at its own
+    width. See docs/precision.md for the ladder contract."""
+    import numpy as _np
+
+    if _np.dtype(dtype) == _np.dtype(jnp.bfloat16):
+        return jnp.bfloat16, jnp.float32
+    return dtype, dtype
+
+
 def _ref_total(params: KernelParams, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu):
     return batched_block_loglik(
         params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu=nu
@@ -29,14 +42,18 @@ def _ref_total(params: KernelParams, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask
 
 @partial(jax.custom_vjp, nondiff_argnums=(7,))
 def sbv_loglik(params: KernelParams, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu=3.5):
-    """Total SBV log-likelihood via the fused Pallas kernel."""
-    dtype = blk_x.dtype
+    """Total SBV log-likelihood via the fused Pallas kernel.
+
+    The coordinate dtype selects the precision tier: bf16 coords run
+    bf16-assembly with f32 accumulation (params/observations/masks cast
+    to f32); f32/f64 inputs run the legacy single-dtype kernel."""
+    _, acc = ladder_dtypes(blk_x.dtype)
     per_block = sbv_loglik_pallas(
-        params.beta.astype(dtype),
-        params.sigma2.astype(dtype),
-        params.nugget.astype(dtype),
-        blk_x, blk_y, blk_mask.astype(dtype),
-        nn_x, nn_y, nn_mask.astype(dtype),
+        params.beta.astype(acc),
+        params.sigma2.astype(acc),
+        params.nugget.astype(acc),
+        blk_x, blk_y.astype(acc), blk_mask.astype(acc),
+        nn_x, nn_y.astype(acc), nn_mask.astype(acc),
         nu=nu,
     )
     return jnp.sum(per_block)
@@ -76,11 +93,21 @@ def select_backend(bs: int, m: int, kind: str = "predict", dtype=None) -> str:
     kernel, and small ragged buckets the vmapped ``ref`` program (where
     kernel launch overhead would dominate). ``kind`` is ``'predict'`` or
     ``'loglik'`` (the loglik kernel has no tiled variant).
+
+    Dtype policy (the full matrix is pinned in tests/test_buckets.py):
+    the compiled tiled path takes f32 buckets aligned to the native
+    (8, 128) tile and bf16-assembly buckets aligned to bf16's doubled
+    (16, 128) sublane tile; f64 — which the compiled TPU kernel refuses —
+    and unaligned/narrow shapes fall through to the fused ``pallas``
+    kernel or the vmapped ``ref`` program by size.
     """
     import numpy as _np
 
-    f32 = dtype is not None and _np.dtype(dtype) == _np.float32
-    if kind == "predict" and f32 and bs % 8 == 0 and m % 128 == 0:
+    dt = None if dtype is None else _np.dtype(dtype)
+    bf16 = dt is not None and dt == _np.dtype(jnp.bfloat16)
+    tiled_ok = bf16 or (dt is not None and dt == _np.float32)
+    sublane = 16 if bf16 else 8
+    if kind == "predict" and tiled_ok and bs % sublane == 0 and m % 128 == 0:
         return "pallas_tiled"
     if bs * m >= 2048:
         return "pallas"
@@ -96,24 +123,25 @@ def sbv_predict(params: KernelParams, q_x, q_mask, nn_x, nn_y, nn_mask, nu=3.5,
     ``tiled=True`` routes through ``sbv_predict_tiled`` (bs/m rounded to
     the native 8x128 f32 tile — the compiled non-interpret TPU path).
     Serving-only path: not differentiable (prediction conditions on fixed
-    fitted parameters; use the ref backend to differentiate)."""
-    dtype = q_x.dtype
+    fitted parameters; use the ref backend to differentiate). bf16 query/
+    neighbor coords run bf16-assembly with f32 accumulation."""
+    _, acc = ladder_dtypes(q_x.dtype)
     fn = sbv_predict_tiled if tiled else sbv_predict_pallas
     return fn(
-        params.beta.astype(dtype),
-        params.sigma2.astype(dtype),
-        params.nugget.astype(dtype),
-        q_x, q_mask.astype(dtype),
-        nn_x, nn_y, nn_mask.astype(dtype),
+        params.beta.astype(acc),
+        params.sigma2.astype(acc),
+        params.nugget.astype(acc),
+        q_x, q_mask.astype(acc),
+        nn_x, nn_y.astype(acc), nn_mask.astype(acc),
         nu=nu,
     )
 
 
 def matern_cov(xa, xb, params: KernelParams, nu: float = 3.5, tile: int = 128):
     """Batched scaled-Matern covariance via the tiled Pallas kernel."""
-    dtype = xa.dtype
+    _, acc = ladder_dtypes(xa.dtype)
     return matern_cov_pallas(
-        xa, xb, params.beta.astype(dtype), params.sigma2.astype(dtype),
+        xa, xb, params.beta.astype(acc), params.sigma2.astype(acc),
         nu=nu, tile_n=tile, tile_m=tile,
     )
 

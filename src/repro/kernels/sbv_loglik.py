@@ -44,12 +44,31 @@ def _matern_poly(r, nu: float):
     return poly * jnp.exp(-r)
 
 
-def _masked_cov_tile(za, zb, mask_a, mask_b, sigma2, nugget, nu, identity: bool):
-    """Covariance tile between pre-scaled coords; masked, optional unit-diag pad."""
+def _masked_cov_tile(za, zb, mask_a, mask_b, sigma2, nugget, nu, identity: bool,
+                     acc=None, narrow_gemm: bool = False):
+    """Covariance tile between pre-scaled coords; masked, optional unit-diag pad.
+
+    ``acc`` is the accumulation dtype of the precision ladder
+    (docs/precision.md): norms, sqrt/exp, and everything downstream run
+    in ``acc``; the distance GEMM accumulates in ``acc`` via
+    ``preferred_element_type``. ``narrow_gemm=True`` feeds the GEMM its
+    operands at the coords' own storage width — the MXU's native bf16
+    mode (exact bf16xbf16 products, f32 accumulation). Interpret mode
+    must pass False: its dot ignores the accumulation request and rounds
+    at the operand width, injecting an unstructured O(eps_bf16 |z|^2)
+    error that breaks positive-definiteness of the assembled covariance.
+    Upcasting the operands reproduces the hardware MXU numerics exactly
+    (bf16 products are representable in f32), so both paths compute the
+    true kernel matrix of the bf16-rounded points — PD by construction.
+    ``acc=None`` is the legacy single-dtype path (bitwise unchanged)."""
+    acc = za.dtype if acc is None else acc
+    za_a = za.astype(acc)
+    zb_a = zb.astype(acc)
+    ga, gb = (za, zb) if narrow_gemm else (za_a, zb_a)
     d2 = (
-        jnp.sum(za * za, axis=-1)[:, None]
-        + jnp.sum(zb * zb, axis=-1)[None, :]
-        - 2.0 * jnp.dot(za, zb.T, preferred_element_type=za.dtype)
+        jnp.sum(za_a * za_a, axis=-1)[:, None]
+        + jnp.sum(zb_a * zb_a, axis=-1)[None, :]
+        - 2.0 * jnp.dot(ga, gb.T, preferred_element_type=acc)
     )
     r = jnp.sqrt(jnp.maximum(d2, 0.0) + 1e-30)
     k = sigma2 * _matern_poly(r, nu)
@@ -62,8 +81,17 @@ def _masked_cov_tile(za, zb, mask_a, mask_b, sigma2, nugget, nu, identity: bool)
     return k
 
 
-def _cholesky_inplace(a):
-    """Left-looking Cholesky of SPD ``a`` via mask-select column writes."""
+def _cholesky_inplace(a, floor=1e-30):
+    """Left-looking Cholesky of SPD ``a`` via mask-select column writes.
+
+    ``floor`` is the pivot clamp. The 1e-30 default only guards exact
+    zeros; reduced-precision assembly (bf16 tier) passes an
+    eps(storage)-scaled floor instead, because its unstructured GEMM
+    error can push Schur-complement eigenvalues slightly negative — a
+    tiny clamped pivot would otherwise amplify into overflow/NaN. The
+    clamp turns an indefinite direction into a bounded, *measurable*
+    likelihood error, which the precision ladder's probe-and-demote
+    harness then judges against the tier budget (docs/precision.md)."""
     n = a.shape[0]
     idx = jax.lax.iota(jnp.int32, n)
 
@@ -71,7 +99,7 @@ def _cholesky_inplace(a):
         kmask = (idx < j).astype(l.dtype)          # (n,) columns < j are final
         lj = l[j, :] * kmask                        # row j restricted to final cols
         s = jnp.dot(l, lj, preferred_element_type=l.dtype)  # s_i = sum_{k<j} L_ik L_jk
-        djj = jnp.sqrt(jnp.maximum(l[j, j] - s[j], 1e-30))
+        djj = jnp.sqrt(jnp.maximum(l[j, j] - s[j], floor))
         col = (l[:, j] - s) / djj
         col = jnp.where(idx == j, djj, col)
         col = jnp.where(idx < j, 0.0, col)          # zero strictly-upper part
@@ -101,24 +129,42 @@ def _sbv_kernel(
     beta_ref, scal_ref,
     blk_x_ref, blk_y_ref, blk_m_ref, nn_x_ref, nn_y_ref, nn_m_ref,
     out_ref,
-    *, nu: float,
+    *, nu: float, narrow_gemm: bool = False,
 ):
-    beta = beta_ref[...]              # (d,)
+    beta = beta_ref[...]              # (d,) accumulation dtype
     sigma2 = scal_ref[0]
     nugget = scal_ref[1]
+    acc = beta.dtype                  # ladder accumulation dtype
 
-    zb = blk_x_ref[0] / beta          # (bs, d) scaled block coords
-    zn = nn_x_ref[0] / beta           # (m, d)
-    mb = blk_m_ref[0]                 # (bs,) float mask
+    # Coordinate scaling stays at the coords' own storage width so a
+    # bf16-assembly bucket's distance GEMM sees narrow operands; the
+    # contraction accumulates in ``acc`` inside _masked_cov_tile.
+    xb = blk_x_ref[0]
+    xn = nn_x_ref[0]
+    zb = xb / beta.astype(xb.dtype)   # (bs, d) scaled block coords
+    zn = xn / beta.astype(xn.dtype)   # (m, d)
+    mb = blk_m_ref[0]                 # (bs,) float mask, acc dtype
     mn = nn_m_ref[0]                  # (m,)
     yb = blk_y_ref[0] * mb
     yn = nn_y_ref[0] * mn
 
-    k_con = _masked_cov_tile(zn, zn, mn, mn, sigma2, nugget, nu, identity=True)
-    k_cross = _masked_cov_tile(zn, zb, mn, mb, sigma2, nugget, nu, identity=False)
-    k_lk = _masked_cov_tile(zb, zb, mb, mb, sigma2, nugget, nu, identity=True)
+    k_con = _masked_cov_tile(zn, zn, mn, mn, sigma2, nugget, nu, identity=True,
+                             acc=acc, narrow_gemm=narrow_gemm)
+    k_cross = _masked_cov_tile(zn, zb, mn, mb, sigma2, nugget, nu,
+                               identity=False, acc=acc, narrow_gemm=narrow_gemm)
+    k_lk = _masked_cov_tile(zb, zb, mb, mb, sigma2, nugget, nu, identity=True,
+                            acc=acc, narrow_gemm=narrow_gemm)
 
-    l_con = _cholesky_inplace(k_con)
+    # Narrow-assembly tiers clamp Cholesky pivots at the assembly
+    # round-off scale (eps * sigma2): the bf16 GEMM's unstructured error
+    # can make the Schur complement slightly indefinite, and the default
+    # 1e-30 floor would let a clamped pivot blow up the substitution.
+    if xb.dtype == acc:
+        floor = 1e-30
+    else:
+        floor = jnp.finfo(xb.dtype).eps * sigma2
+
+    l_con = _cholesky_inplace(k_con, floor=floor)
     # Joint solve against [K_cross | y_nn]: one substitution pass.
     rhs = jnp.concatenate([k_cross, yn[:, None]], axis=1)   # (m, bs+1)
     sol = _forward_sub(l_con, rhs)
@@ -128,7 +174,7 @@ def _sbv_kernel(
     sigma_new = k_lk - jnp.dot(a.T, a, preferred_element_type=a.dtype)
     mu = jnp.dot(a.T, z, preferred_element_type=a.dtype)
 
-    l_new = _cholesky_inplace(sigma_new)
+    l_new = _cholesky_inplace(sigma_new, floor=floor)
     v = _forward_sub(l_new, (yb - mu)[:, None])[:, 0]
 
     n_real = jnp.sum(mb)
@@ -147,19 +193,25 @@ def sbv_loglik_pallas(
 ):
     """Per-block log-likelihoods, shape (bc,). Sum for the total.
 
-    All float inputs must share one dtype (f32 on TPU; f64 ok in interpret
-    mode). Masks are float (1.0 real / 0.0 pad).
+    Observations/masks set the ACCUMULATION dtype (f32 on TPU; f64 ok in
+    interpret mode); coordinates may additionally arrive one ladder rung
+    narrower (bf16) for reduced-precision covariance assembly — see
+    docs/precision.md. Masks are float (1.0 real / 0.0 pad).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bc, bs, d = blk_x.shape
     m = nn_x.shape[1]
-    dtype = blk_x.dtype
+    dtype = blk_y.dtype  # accumulation dtype; blk_x may be narrower
     scal = jnp.stack([jnp.asarray(sigma2, dtype), jnp.asarray(nugget, dtype)])
     beta = jnp.asarray(beta, dtype)
 
     grid = (bc,)
-    kernel = functools.partial(_sbv_kernel, nu=nu)
+    # Compiled TPU runs feed the MXU narrow (bf16) GEMM operands;
+    # interpret mode upcasts them to reproduce the MXU's f32 accumulation
+    # (its dot otherwise rounds at the operand width — see
+    # _masked_cov_tile).
+    kernel = functools.partial(_sbv_kernel, nu=nu, narrow_gemm=not interpret)
     return pl.pallas_call(
         kernel,
         grid=grid,

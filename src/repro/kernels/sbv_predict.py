@@ -35,22 +35,36 @@ def _sbv_predict_kernel(
     beta_ref, scal_ref,
     q_x_ref, q_m_ref, nn_x_ref, nn_y_ref, nn_m_ref,
     mu_ref, var_ref,
-    *, nu: float,
+    *, nu: float, narrow_gemm: bool = False,
 ):
-    beta = beta_ref[...]              # (d,)
+    beta = beta_ref[...]              # (d,) accumulation dtype
     sigma2 = scal_ref[0]
     nugget = scal_ref[1]
+    acc = beta.dtype                  # ladder accumulation dtype
 
-    zq = q_x_ref[0] / beta            # (bs, d) scaled query coords
-    zn = nn_x_ref[0] / beta           # (m, d) scaled neighbor coords
-    mq = q_m_ref[0]                   # (bs,) float mask
+    # Same assembly/accumulation split as the likelihood kernel: coords
+    # scale at their own storage width, the GEMM accumulates in ``acc``.
+    xq = q_x_ref[0]
+    xn = nn_x_ref[0]
+    zq = xq / beta.astype(xq.dtype)   # (bs, d) scaled query coords
+    zn = xn / beta.astype(xn.dtype)   # (m, d) scaled neighbor coords
+    mq = q_m_ref[0]                   # (bs,) float mask, acc dtype
     mn = nn_m_ref[0]                  # (m,)
     yn = nn_y_ref[0] * mn
 
-    k_con = _masked_cov_tile(zn, zn, mn, mn, sigma2, nugget, nu, identity=True)
-    k_cross = _masked_cov_tile(zn, zq, mn, mq, sigma2, nugget, nu, identity=False)
+    k_con = _masked_cov_tile(zn, zn, mn, mn, sigma2, nugget, nu, identity=True,
+                             acc=acc, narrow_gemm=narrow_gemm)
+    k_cross = _masked_cov_tile(zn, zq, mn, mq, sigma2, nugget, nu,
+                               identity=False, acc=acc, narrow_gemm=narrow_gemm)
 
-    l_con = _cholesky_inplace(k_con)
+    # Same tier-aware pivot clamp as the likelihood kernel: bf16 assembly
+    # error can nudge k_con off positive-definite near the nugget scale.
+    if xq.dtype == acc:
+        floor = 1e-30
+    else:
+        floor = jnp.finfo(xq.dtype).eps * sigma2
+
+    l_con = _cholesky_inplace(k_con, floor=floor)
     # Joint solve against [K_cross | y_nn]: one substitution pass.
     rhs = jnp.concatenate([k_cross, yn[:, None]], axis=1)   # (m, bs+1)
     sol = _forward_sub(l_con, rhs)
@@ -73,19 +87,24 @@ def sbv_predict_pallas(
 ):
     """Per-block conditional means and marginal variances, each (bc, bs).
 
-    All float inputs must share one dtype (f32 on TPU; f64 ok in interpret
-    mode). Masks are float (1.0 real / 0.0 pad).
+    Observations/masks set the ACCUMULATION dtype (f32 on TPU; f64 ok in
+    interpret mode); coordinates may arrive one ladder rung narrower
+    (bf16) for reduced-precision covariance assembly — docs/precision.md.
+    Masks are float (1.0 real / 0.0 pad).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bc, bs, d = q_x.shape
     m = nn_x.shape[1]
-    dtype = q_x.dtype
+    dtype = nn_y.dtype  # accumulation dtype; q_x/nn_x may be narrower
     scal = jnp.stack([jnp.asarray(sigma2, dtype), jnp.asarray(nugget, dtype)])
     beta = jnp.asarray(beta, dtype)
 
     grid = (bc,)
-    kernel = functools.partial(_sbv_predict_kernel, nu=nu)
+    # Narrow MXU GEMM operands on hardware, f32-upcast in interpret mode
+    # (faithful MXU accumulation emulation — see _masked_cov_tile).
+    kernel = functools.partial(_sbv_predict_kernel, nu=nu,
+                               narrow_gemm=not interpret)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -129,18 +148,23 @@ def sbv_predict_tiled(
     the unaligned shapes exactly; padding happens INSIDE the jit so the
     caller's shapes stay the cache key.
 
-    On TPU the inputs must be f32 (the compiled kernel's native dtype);
-    interpret mode (CPU) accepts f64 as well.
+    On TPU the coordinate inputs must be f32 or bf16 (the compiled
+    kernel's native MXU dtypes; bf16 assembly pads bs to the doubled
+    16-sublane tile — see docs/precision.md); interpret mode (CPU)
+    accepts f64 as well.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if not interpret and q_x.dtype != jnp.float32:
+    if not interpret and q_x.dtype not in (jnp.float32, jnp.bfloat16):
         raise TypeError(
-            f"compiled TPU predict kernel needs float32 inputs, got {q_x.dtype}"
+            "compiled TPU predict kernel needs float32 or bfloat16 assembly "
+            f"inputs, got {q_x.dtype}"
         )
     bc, bs, _ = q_x.shape
     m = nn_x.shape[1]
-    bs_t, m_t = tile_predict_shapes(bs, m)
+    # bf16 min tile is (16, 128): the sublane side doubles vs f32's (8, 128).
+    sublane = 16 if q_x.dtype == jnp.bfloat16 else 8
+    bs_t, m_t = tile_predict_shapes(bs, m, bs_mult=sublane)
 
     pad1 = lambda a, width: jnp.pad(a, ((0, 0), (0, width - a.shape[1]))
                                     + ((0, 0),) * (a.ndim - 2))

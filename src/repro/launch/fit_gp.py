@@ -84,6 +84,20 @@ def build_parser():
     ap.add_argument("--prefetch", type=int, default=2,
                     help="disk-tier spool pieces staged ahead of the device "
                          "by the H2D producer thread (0 = synchronous reads)")
+    ap.add_argument("--precision", default=None,
+                    choices=["bf16", "f32", "f64"],
+                    help="covariance-assembly ladder tier (docs/precision.md);"
+                         " in-core fits probe per bucket and demote rungs "
+                         "that exceed the tier's error budget")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure candidate (buckets x precision) shapes on "
+                         "a dataset sample first and fit with the winner "
+                         "(docs/precision.md); with --tuning-record PATH the "
+                         "measured record is persisted there")
+    ap.add_argument("--tuning-record", default=None, metavar="PATH",
+                    help="persisted autotuner record: with --autotune the "
+                         "save destination, otherwise loaded to start the "
+                         "fit pre-tuned")
     ap.add_argument("--distributed-hosts", type=int, default=0, metavar="K",
                     help="spawn K rank processes over jax.distributed and "
                          "run the multi-host streaming fit (requires the "
@@ -162,6 +176,8 @@ def _spawn_hosts(args) -> dict:
                   "--prefetch", str(args.prefetch)]
     if args.stream_chunk:
         child_argv += ["--stream-chunk", str(args.stream_chunk)]
+    if args.precision:
+        child_argv += ["--precision", args.precision]
     if args.device_cache_mb is not None:
         child_argv += ["--device-cache-mb", str(args.device_cache_mb)]
     if args.result_json:
@@ -234,7 +250,7 @@ def _run_rank(ctx, args) -> dict:
                   outer_rounds=args.outer_rounds, backend=args.backend,
                   stream_chunk=args.stream_chunk, verbose=True,
                   device_cache=device_cache, prefetch=args.prefetch,
-                  multihost=ctx)
+                  multihost=ctx, precision=args.precision)
     t_fit = time.time() - t0
     peak = sampler.stop()
 
@@ -288,6 +304,21 @@ def main(argv=None):
     elif args.write_store:
         store = write_store(args)
 
+    def _tune(x_t, y_t, cfg_t):
+        """Resolve the tuning input: measure (--autotune) or load a
+        persisted record (--tuning-record without --autotune)."""
+        if args.autotune:
+            from repro.tuning import autotune_loglik
+
+            t_a = time.time()
+            rec = autotune_loglik(x_t, y_t, cfg_t, backend=args.backend,
+                                  save_dir=args.tuning_record, verbose=True)
+            print(f"[fit_gp] autotune {time.time() - t_a:.1f}s -> "
+                  f"buckets={rec.n_buckets} precision={rec.precision} "
+                  f"stream-chunk={rec.stream_chunk}")
+            return rec
+        return args.tuning_record
+
     if store is not None:
         rng = np.random.default_rng(args.seed + 999)
         # Probe set: a bounded random row sample. The streaming fit trains
@@ -307,13 +338,23 @@ def main(argv=None):
             distributed = (make_worker_mesh(args.workers), "workers")
         device_cache = (None if args.device_cache_mb is None
                         else int(args.device_cache_mb * 2**20))
+        tuning = None
+        if args.autotune or args.tuning_record:
+            # Autotune on a bounded head sample of the store; the record's
+            # stream_chunk recommendation still uses the FULL row count.
+            if args.autotune:
+                x_s, y_s = store.read_slice(0, min(store.n_rows, 20_000))
+                tuning = _tune(x_s, y_s, cfg)
+            else:
+                tuning = _tune(None, None, cfg)
 
         t0 = time.time()
         res = fit_sbv(store, None, cfg, inner_steps=args.inner_steps,
                       outer_rounds=args.outer_rounds, backend=args.backend,
                       stream_chunk=args.stream_chunk, verbose=True,
                       distributed=distributed, device_cache=device_cache,
-                      prefetch=args.prefetch)
+                      prefetch=args.prefetch, precision=args.precision,
+                      tuning=tuning)
         t_fit = time.time() - t0
         beta = np.asarray(res.params.beta)
         st = res.stream_stats
@@ -346,11 +387,15 @@ def main(argv=None):
             mesh = make_worker_mesh(args.workers)
             distributed = (mesh, "workers")
 
+        tuning = _tune(x_tr, y_tr_c, cfg) \
+            if (args.autotune or args.tuning_record) else None
+
         t0 = time.time()
         res = fit_sbv(x_tr, y_tr_c, cfg, inner_steps=args.inner_steps,
                       outer_rounds=args.outer_rounds, backend=args.backend,
                       distributed=distributed, verbose=True,
-                      stream_chunk=args.stream_chunk)
+                      stream_chunk=args.stream_chunk,
+                      precision=args.precision, tuning=tuning)
         t_fit = time.time() - t0
         beta = np.asarray(res.params.beta)
         print(f"[fit_gp] fit {len(y_tr)} pts in {t_fit:.1f}s; "

@@ -12,7 +12,7 @@ from .batching import (
 )
 from .pipeline import (
     PipelineConfig, SpoolResultSink, pack_scheduled, predict_pipelined,
-    predict_synchronous, request_chunk_bounds, run_chunk_stream,
+    predict_synchronous, request_chunk_bounds, run_chunk_stream, tuned_config,
 )
 from .scheduler import ContinuousScheduler, ScheduledChunk
 from .server import GPServer, GPServerConfig, ServeResult
@@ -23,7 +23,7 @@ __all__ = [
     "PredictRequest", "SchedulerPolicy", "ServeRequest", "SLOClass",
     "PipelineConfig", "SpoolResultSink", "pack_scheduled",
     "predict_pipelined", "predict_synchronous", "request_chunk_bounds",
-    "run_chunk_stream",
+    "run_chunk_stream", "tuned_config",
     "ContinuousScheduler", "ScheduledChunk",
     "GPServer", "GPServerConfig", "ServeResult",
     "RequestTrace", "ServerStats",

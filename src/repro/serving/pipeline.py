@@ -55,6 +55,43 @@ class PipelineConfig:
     prefetch: int = 2         # packed chunks in flight (2 = double buffer)
     n_buckets: int | None = None  # size-bucketed micro-batches (docs/packing.md)
     stream_chunk: int | None = None  # out-of-core train index (docs/streaming.md)
+    precision: str | None = None  # ladder tier (docs/precision.md); None = f64
+
+    def __post_init__(self):
+        # Normalize the precision knob once: a PrecisionPolicy or tier
+        # string collapses to the tier name, f64 collapses to None, and
+        # a narrow tier pins dtype to its accumulation width (queries
+        # pack at acc; coordinates drop to storage in the chunk split).
+        if self.precision is not None:
+            from repro.core.buckets import acc_dtype, as_policy
+
+            tier = as_policy(self.precision).tier
+            if tier == "f64":
+                self.precision = None
+            else:
+                self.precision = tier
+                self.dtype = acc_dtype(tier)
+
+
+def tuned_config(tuning, **overrides) -> PipelineConfig:
+    """Build a ``PipelineConfig`` from a persisted autotuner record
+    (TuningRecord / dict / checkpoint path — see ``repro.tuning``),
+    with explicit ``overrides`` winning over the record. This is how
+    ``serve gp --tuning-record`` starts pre-tuned."""
+    from repro.tuning import as_record
+
+    rec = as_record(tuning)
+    kw = {}
+    if rec.n_buckets:
+        kw["n_buckets"] = rec.n_buckets
+    if rec.stream_chunk:
+        kw["stream_chunk"] = rec.stream_chunk
+    if rec.precision:
+        kw["precision"] = rec.precision
+    if rec.backend:
+        kw["backend"] = rec.backend
+    kw.update(overrides)
+    return PipelineConfig(**kw)
 
 
 def _n_rows(x_test) -> int:
@@ -71,11 +108,18 @@ def make_chunk_split(cfg: PipelineConfig):
     bucketing step of one chunk (the uniform layout is the one-piece
     special case). Pure numpy: the pipelined driver runs it on the
     PRODUCER thread so the slice copies overlap device compute like the
-    rest of packing."""
+    rest of packing. The precision tier's storage cast also lands here
+    (host numpy, overlapped) — queries pack at the accumulation dtype
+    and coordinates drop to the storage dtype per piece."""
+    tier = cfg.precision
     if not cfg.n_buckets:
-        return lambda packed: [packed]
+        if tier is None:
+            return lambda packed: [packed]
+        from repro.core.buckets import cast_prediction
 
-    from repro.core.buckets import bucket_mults, bucket_prediction
+        return lambda packed: [cast_prediction(packed, tier)]
+
+    from repro.core.buckets import bucket_mults, bucket_prediction, cast_prediction
     from repro.core.packing import round_up
 
     # Serving quantizes bucket shapes harder than the one-shot path:
@@ -83,12 +127,16 @@ def make_chunk_split(cfg: PipelineConfig):
     # of 8 (masked dummies, inert), so steady-state traffic converges
     # to a bounded set of compile-cache keys just like the uniform
     # `pad_shapes` protocol.
-    bs_mult, m_mult = (max(v, 8) for v in bucket_mults(cfg.backend))
+    bs_mult, m_mult = (max(v, 8)
+                       for v in bucket_mults(cfg.backend, precision=tier))
 
     def split(packed):
         pieces = bucket_prediction(packed, n_buckets=cfg.n_buckets,
                                    bs_mult=bs_mult, m_mult=m_mult).buckets
-        return [p.pad_to_blocks(round_up(p.n_blocks, 8)) for p in pieces]
+        pieces = [p.pad_to_blocks(round_up(p.n_blocks, 8)) for p in pieces]
+        if tier is not None:
+            pieces = [cast_prediction(p, tier) for p in pieces]
+        return pieces
 
     return split
 

@@ -1,0 +1,18 @@
+"""Persistent shape autotuner (docs/precision.md).
+
+Measures short candidate runs over the observed block-size histogram and
+device memory budget, picks the execution shape (bucket count/ceilings,
+tile multiples, backend, precision tier, streaming chunk), and persists
+the winner as a ``TuningRecord`` next to the checkpoint so later fits,
+prediction, and serving start pre-tuned.
+"""
+from .autotune import autotune_loglik, recommend_stream_chunk
+from .record import RECORD_VERSION, TuningRecord, as_record
+
+__all__ = [
+    "RECORD_VERSION",
+    "TuningRecord",
+    "as_record",
+    "autotune_loglik",
+    "recommend_stream_chunk",
+]

@@ -1,0 +1,217 @@
+"""Shape autotuner: measured candidate runs -> persistent TuningRecord.
+
+The bucketed/mixed-precision execution layer has a handful of shape
+knobs whose best settings depend on the dataset's block-size histogram
+and the device (docs/packing.md, docs/precision.md): the bucket count K,
+the per-bucket (bs, m) ceilings that K induces, the tile multiples, the
+kernel backend, and the precision tier. Analytic work models
+(``core.buckets.loglik_work``) rank candidates by padded FLOPs, but the
+crossover points (kernel launch overhead vs padding waste, narrow-tier
+assembly vs cast overhead) are device facts — so the autotuner MEASURES:
+each candidate layout runs the real ``packed_loglik`` program a few
+times on the actual device and the fastest wall-clock wins.
+
+Probing cost is bounded: candidates run on a row subsample
+(``sample_rows``) and each is a handful of likelihood evaluations, paid
+once per (dataset, device) pairing — the whole point of persisting the
+winner as a ``TuningRecord`` next to the checkpoint.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _size_stats(sizes: np.ndarray) -> dict:
+    sizes = np.asarray(sizes, dtype=np.float64)
+    if sizes.size == 0:
+        return {"min": 0, "p50": 0, "max": 0, "mean": 0.0}
+    return {
+        "min": int(sizes.min()),
+        "p50": int(np.median(sizes)),
+        "max": int(sizes.max()),
+        "mean": float(sizes.mean()),
+    }
+
+
+def _time_loglik(params, packed, nu, backend, repeats: int) -> float:
+    """Best-of-N wall time of one likelihood evaluation (compile excluded:
+    the first call warms jit; min-of-N suppresses scheduler noise the
+    same way benchmarks/common.py's calibration does)."""
+    import jax
+
+    from repro.core.vecchia import packed_loglik
+
+    jax.block_until_ready(packed_loglik(params, packed, nu=nu, backend=backend))
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            packed_loglik(params, packed, nu=nu, backend=backend))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def recommend_stream_chunk(n_rows: int, d: int, m: int, bs_avg: float,
+                           tier: str = "f64", budget: int | None = None,
+                           frac: float = 0.25) -> int | None:
+    """Streaming rows-per-pass from the device byte budget.
+
+    Inverts the ``working_set_model`` packed-chunk term: a chunk costs
+    ~4x its packed bytes resident (host load + device transfer + arena
+    slack), and a packed row carries its coordinates at the tier's
+    storage width, its observation at the accumulation width, one mask
+    byte, and an amortized ``m / bs_avg`` share of its block's neighbor
+    rows. ``frac`` of the budget goes to the chunk window (the rest
+    stays with the device spool cache + grad live set). Returns ``None``
+    when the whole dataset fits inside one chunk — in-core execution is
+    strictly better than streaming overhead then."""
+    from repro.core.buckets import acc_dtype, storage_dtype
+
+    if budget is None:
+        from repro.data.streaming import device_cache_budget
+
+        budget = device_cache_budget()
+    st = np.dtype(storage_dtype(tier)).itemsize
+    ac = np.dtype(acc_dtype(tier)).itemsize
+    per_row = (d * st + ac + 1) * (1.0 + m / max(bs_avg, 1.0))
+    chunk = int(frac * budget / (4.0 * per_row))
+    chunk = max(4096, chunk)
+    if chunk >= n_rows:
+        return None
+    return chunk
+
+
+def autotune_loglik(
+    x: np.ndarray,
+    y: np.ndarray,
+    cfg,
+    params=None,
+    nu: float = 3.5,
+    backend: str = "auto",
+    tiers=("bf16", "f32", "f64"),
+    bucket_grid=(0, 2, 4, 8),
+    error_budget: float | None = None,
+    repeats: int = 3,
+    sample_rows: int | None = 20000,
+    save_dir: str | None = None,
+    verbose: bool = False,
+):
+    """Measure the (K x tier) candidate grid and return the TuningRecord.
+
+    ``bucket_grid`` entries are bucket levels K (0 = unbucketed uniform
+    layout); ``tiers`` are precision-ladder candidates, each enforced by
+    ``assign_precision`` probing before timing — a candidate is timed at
+    the tiers it would ACTUALLY run, so an over-budget bf16 request is
+    measured (and recorded) as its demoted mix, never as a fantasy
+    configuration. ``sample_rows`` caps the measurement subsample
+    (None = full dataset). ``save_dir`` persists the record
+    (``tuning_record.json``) for ``fit_sbv(tuning=...)`` /
+    ``predict_sbv(tuning=...)`` / ``serve gp --tuning-record``."""
+    import jax
+
+    from repro.core.buckets import (
+        apply_precision, assign_precision, bucket_blocks, cast_packed,
+        loglik_work, PrecisionPolicy, _true_sizes,
+    )
+    from repro.core.kernels_math import KernelParams
+    from repro.core.pipeline import preprocess
+    from repro.data.streaming import device_cache_budget
+    from repro.kernels import ops as kops
+
+    from .record import TuningRecord
+
+    x = np.asarray(x)
+    y = np.asarray(y)
+    n_full, d = x.shape
+    if sample_rows is not None and n_full > sample_rows:
+        # Deterministic stride subsample keeps the spatial spread (and
+        # therefore the block-size histogram's shape) intact.
+        idx = np.linspace(0, n_full - 1, sample_rows).astype(np.int64)
+        x_s, y_s = x[idx], y[idx]
+    else:
+        x_s, y_s = x, y
+    if params is None:
+        params = KernelParams.create(
+            sigma2=float(np.var(y_s)), beta=0.5, nugget=1e-3, d=d)
+
+    packed, _ = preprocess(x_s, y_s, np.asarray(params.beta), cfg)
+    bs_true = _true_sizes(packed.blk_mask)
+    m_true = _true_sizes(packed.nn_mask)
+    histogram = {"bs": _size_stats(bs_true), "m": _size_stats(m_true)}
+
+    candidates = []
+    best = None
+    for k in bucket_grid:
+        layout = bucket_blocks(packed, n_buckets=k) if k else packed
+        for tier in tiers:
+            policy = PrecisionPolicy(tier=tier, error_budget=error_budget)
+            assigned = assign_precision(params, layout, policy, nu=nu,
+                                        backend=backend)
+            if k:
+                cast = apply_precision(layout, assigned)
+                occ = cast.occupancy()
+            else:
+                cast = cast_packed(packed, assigned[0])
+                true_f, padded_f = loglik_work([cast])
+                occ = true_f / padded_f if padded_f else 1.0
+            t = _time_loglik(params, cast, nu, backend, repeats)
+            cand = {"n_buckets": k or None, "precision": tier,
+                    "tiers": list(assigned), "time_s": t, "occupancy": occ}
+            candidates.append(cand)
+            if verbose:
+                print(f"[autotune] K={k or '-'} tier={tier} -> "
+                      f"{t * 1e3:.2f} ms occ={occ:.3f} tiers={assigned}")
+            if best is None or t < best[0]:
+                best = (t, k, tier, assigned, cast, occ)
+
+    _, k_win, tier_win, tiers_win, cast_win, occ_win = best
+    if k_win:
+        bs_ceils = [int(pk.bs_max) for pk in cast_win.buckets]
+        m_ceils = [int(pk.m) for pk in cast_win.buckets]
+    else:
+        bs_ceils = [int(packed.bs_max)]
+        m_ceils = [int(packed.m)]
+
+    # Predict-side tile multiples for the winning tier: the compiled
+    # tiled predict kernel doubles the sublane tile on bf16 assembly.
+    from repro.core.buckets import acc_dtype, bucket_mults, storage_dtype
+
+    pred_backend = kops.select_backend(
+        int(packed.bs_max), int(packed.m), kind="predict",
+        dtype=storage_dtype(tier_win))
+    bs_mult, m_mult = bucket_mults(pred_backend, precision=tier_win)
+
+    acc_bytes = np.dtype(acc_dtype(tier_win)).itemsize
+    reserve = 16 * 16 * (int(packed.bs_max) + int(packed.m)) ** 2 * acc_bytes
+    budget = device_cache_budget(reserve_bytes=reserve)
+    stream_chunk = recommend_stream_chunk(
+        n_full, d, int(packed.m), float(max(bs_true.mean(), 1.0)),
+        tier=tier_win, budget=budget)
+
+    record = TuningRecord(
+        n_buckets=k_win or None,
+        bs_ceilings=bs_ceils,
+        m_ceilings=m_ceils,
+        bs_mult=int(bs_mult),
+        m_mult=int(m_mult),
+        backend=backend,
+        precision=tier_win,
+        bucket_tiers=list(tiers_win),
+        error_budget=error_budget,
+        stream_chunk=stream_chunk,
+        device_cache_budget=int(budget),
+        occupancy=float(occ_win),
+        histogram=histogram,
+        candidates=candidates,
+        meta={
+            "n_rows": int(n_full), "sampled_rows": int(x_s.shape[0]),
+            "d": int(d), "m": int(packed.m), "bs_max": int(packed.bs_max),
+            "nu": float(nu), "device": jax.default_backend(),
+            "repeats": int(repeats),
+        },
+    )
+    if save_dir is not None:
+        record.save(save_dir)
+    return record

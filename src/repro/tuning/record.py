@@ -1,0 +1,102 @@
+"""Persistent autotuner output: one JSON-serializable TuningRecord.
+
+The autotuner (``repro.tuning.autotune``) measures short candidate runs
+and distills the winner into a ``TuningRecord`` — the execution-shape
+knobs that ``fit_sbv``, ``predict_sbv``, and the serving ``GPServer``
+otherwise discover per process (bucket count and ceilings, tile
+multiples, kernel backend, precision tier, streaming chunk size, device
+cache budget). Persisting it next to the checkpoint
+(``ckpt.save_tuning_record`` -> ``tuning_record.json``) lets every later
+process start pre-tuned: reloading the record reproduces the autotuner's
+choices without re-measuring (pinned in tests/test_ckpt.py).
+
+The record keeps the evidence, not just the verdict: the observed
+block-size histogram and the full measured candidate table ride along so
+a reader (or a regression gate) can audit WHY a shape won.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import asdict, dataclass, field
+
+
+RECORD_VERSION = 1
+
+
+@dataclass
+class TuningRecord:
+    """Autotuned execution shape for one (dataset, device) pairing.
+
+    All fields are JSON-plain so the record round-trips through
+    ``ckpt.save_tuning_record`` byte-stably. ``None`` means "knob not
+    tuned — keep the caller's default"."""
+
+    version: int = RECORD_VERSION
+    n_buckets: int | None = None          # K (bucket levels per dim); None = unbucketed
+    bs_ceilings: list | None = None       # realized block-size bucket ceilings
+    m_ceilings: list | None = None        # realized neighbor-count ceilings
+    bs_mult: int = 1                      # tile multiple for bs ceilings
+    m_mult: int = 1                       # tile multiple for m ceilings
+    backend: str | None = None            # kernel backend ('auto' resolves per bucket)
+    precision: str | None = None          # requested ladder tier (docs/precision.md)
+    bucket_tiers: list | None = None      # probe-enforced per-bucket tiers at tune time
+    error_budget: float | None = None     # PrecisionPolicy override, if any
+    stream_chunk: int | None = None       # streaming rows per pass; None = in-core
+    device_cache_budget: int | None = None  # spool device-tier bytes at tune time
+    occupancy: float | None = None        # true/padded FLOP ratio of the winner
+    histogram: dict | None = None         # observed {bs: {...}, m: {...}} size stats
+    candidates: list = field(default_factory=list)  # measured candidate table
+    meta: dict = field(default_factory=dict)        # n, d, device, timings...
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningRecord":
+        known = {f for f in cls.__dataclass_fields__}
+        rec = cls(**{k: v for k, v in d.items() if k in known})
+        if rec.version > RECORD_VERSION:
+            raise ValueError(
+                f"tuning record version {rec.version} is newer than this "
+                f"build understands ({RECORD_VERSION})")
+        return rec
+
+    def precision_policy(self):
+        """The record's precision choice as a ``core.buckets.PrecisionPolicy``
+        (probing stays ON so a drifted dataset still demotes safely)."""
+        from repro.core.buckets import PrecisionPolicy
+
+        return PrecisionPolicy(tier=self.precision or "f64",
+                               error_budget=self.error_budget)
+
+    # -- persistence ---------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Write ``tuning_record.json`` into ``directory`` (atomic)."""
+        from repro.ckpt import save_tuning_record
+
+        return save_tuning_record(directory, self.to_dict())
+
+    @classmethod
+    def load(cls, directory: str) -> "TuningRecord | None":
+        """Load from a checkpoint directory or a direct json path."""
+        from repro.ckpt import load_tuning_record
+
+        d = load_tuning_record(directory)
+        return None if d is None else cls.from_dict(d)
+
+
+def as_record(obj) -> TuningRecord:
+    """Coerce a TuningRecord / dict / path into a ``TuningRecord``.
+
+    A string is treated as a checkpoint directory or json path; a missing
+    record there is an error (the caller explicitly asked to pre-tune)."""
+    if isinstance(obj, TuningRecord):
+        return obj
+    if isinstance(obj, dict):
+        return TuningRecord.from_dict(obj)
+    if isinstance(obj, (str, os.PathLike)):
+        rec = TuningRecord.load(os.fspath(obj))
+        if rec is None:
+            raise FileNotFoundError(f"no tuning record at {obj!r}")
+        return rec
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a TuningRecord")

@@ -257,6 +257,18 @@ def test_select_backend_policy():
     # the loglik kernel has no tiled variant; big shapes go fused, small ref
     assert select_backend(16, 128, "loglik", np.float32) == "pallas"
     assert select_backend(2, 8, "loglik", np.float64) == "ref"
+    # bf16-assembly buckets tile at the doubled (16, 128) sublane: 8-row
+    # f32-aligned shapes are NOT tiled-eligible at bf16, 16-row ones are
+    import jax.numpy as jnp
+    assert select_backend(8, 256, "predict", jnp.bfloat16) == "pallas"
+    assert select_backend(16, 128, "predict", jnp.bfloat16) == "pallas_tiled"
+    assert select_backend(32, 256, "predict", jnp.bfloat16) == "pallas_tiled"
+    # f64 never takes the compiled tiled kernel, whatever the alignment
+    assert select_backend(8, 256, "predict", np.float64) == "pallas"
+    assert select_backend(16, 128, "predict", np.float64) == "pallas"
+    # bf16 loglik has no tiled variant either; sizes route as usual
+    assert select_backend(16, 128, "loglik", jnp.bfloat16) == "pallas"
+    assert select_backend(4, 8, "loglik", jnp.bfloat16) == "ref"
 
 
 def test_packed_loglik_pallas_backend_per_bucket(skewed_packed):
@@ -360,3 +372,130 @@ def test_fit_sbv_bucketed_smoke():
     losses = [h[2] for h in res.history]
     assert losses[-1] < losses[0]
     assert isinstance(res.packed, BucketedBlocks)  # re-bucketed each refresh
+
+
+# -- mixed-precision ladder (docs/precision.md) -----------------------
+
+tuning = pytest.mark.tuning
+
+
+@tuning
+def test_cast_packed_dtype_contract(skewed_packed):
+    """Tier cast touches coordinates (storage) and observations (acc)
+    only; boolean masks and integer owners pass through untouched."""
+    import jax.numpy as jnp
+    from repro.core.buckets import acc_dtype, cast_packed, storage_dtype
+
+    _, _, packed, _ = skewed_packed
+    for tier in ("bf16", "f32", "f64"):
+        pk = cast_packed(packed, tier)
+        assert pk.blk_x.dtype == storage_dtype(tier)
+        assert pk.nn_x.dtype == storage_dtype(tier)
+        assert pk.blk_y.dtype == acc_dtype(tier)
+        assert pk.nn_y.dtype == acc_dtype(tier)
+        np.testing.assert_array_equal(pk.blk_mask, packed.blk_mask)
+        np.testing.assert_array_equal(pk.owners, packed.owners)
+    assert storage_dtype("bf16") == jnp.bfloat16
+    assert acc_dtype("bf16") == jnp.float32
+
+
+@tuning
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_ladder_nll_within_tier_budget(skewed_packed, backend):
+    """Per-bucket nll at each bucket's PROBED rung stays inside that
+    rung's documented error budget relative to the f64 reference — the
+    deployed-ladder contract ``assign_precision`` enforces by demotion
+    (docs/precision.md). Checked independently of the probe here: the
+    assigned tiers are re-evaluated bucket by bucket."""
+    from repro.core.buckets import (
+        PrecisionPolicy, assign_precision, cast_packed,
+    )
+
+    _, _, packed, _ = skewed_packed
+    bucketed = bucket_blocks(packed, n_buckets=3)
+    for want in ("bf16", "f32"):
+        pol = PrecisionPolicy(tier=want)
+        tiers = assign_precision(PAR, bucketed, pol, backend=backend)
+        assert len(tiers) == len(bucketed.buckets)
+        for pk, tier in zip(bucketed.buckets, tiers):
+            ll_ref = float(packed_loglik(PAR, cast_packed(pk, "f64"),
+                                         backend=backend))
+            ll_t = float(packed_loglik(PAR, cast_packed(pk, tier),
+                                       backend=backend))
+            rel = abs(ll_t - ll_ref) / max(1.0, abs(ll_ref))
+            assert np.isfinite(ll_t)
+            assert rel <= pol.budget_for(tier), (want, tier, backend, rel)
+
+
+@tuning
+def test_assign_precision_demotes_over_budget(skewed_packed):
+    """A vanishing budget forces every bucket down to f64; a loose one
+    keeps the requested rung. Tiers align with the bucket list."""
+    from repro.core.buckets import (
+        PrecisionPolicy, apply_precision, assign_precision,
+    )
+
+    _, _, packed, _ = skewed_packed
+    bucketed = bucket_blocks(packed, n_buckets=3)
+    strict = assign_precision(
+        PAR, bucketed, PrecisionPolicy(tier="bf16", error_budget=0.0))
+    assert strict == ["f64"] * len(bucketed.buckets)
+    loose = assign_precision(
+        PAR, bucketed, PrecisionPolicy(tier="bf16", error_budget=1.0))
+    assert loose == ["bf16"] * len(bucketed.buckets)
+    mixed = apply_precision(bucketed, loose)
+    ll = float(packed_loglik(PAR, mixed))
+    assert np.isfinite(ll)
+
+
+@tuning
+def test_precision_fit_and_predict_mspe(skewed_packed):
+    """bf16-assembly end to end: the fit converges with per-bucket
+    probed tiers and prediction MSPE stays within the tier's budget of
+    the f64 prediction."""
+    from repro.core.fit import fit_sbv
+
+    x, y, _, _ = skewed_packed
+    cfg = SBVConfig(n_blocks=12, m=15)
+    res = fit_sbv(x, y, cfg, inner_steps=4, outer_rounds=1, n_buckets=3,
+                  precision="bf16")
+    losses = [h[2] for h in res.history]
+    assert losses[-1] < losses[0]
+    assert res.precision_tiers is not None
+    assert set(res.precision_tiers) <= {"bf16", "f32", "f64"}
+
+    rng = np.random.default_rng(11)
+    xt = rng.uniform(x.min(0), x.max(0), size=(120, x.shape[1]))
+    p64 = predict_sbv(res.params, x, y, xt, bs_pred=10, m_pred=30, n_sims=2)
+    p16 = predict_sbv(res.params, x, y, xt, bs_pred=10, m_pred=30, n_sims=2,
+                      precision="bf16")
+    assert np.all(np.isfinite(p16.mean)) and np.all(p16.var > 0)
+    scale = float(np.sqrt(np.mean(p64.mean ** 2))) + 1e-12
+    rel = float(np.sqrt(np.mean((p16.mean - p64.mean) ** 2))) / scale
+    assert rel < 0.1, rel  # bf16 coords round at ~4e-3; keep headroom
+
+
+@tuning
+def test_autotune_record_reproduces_choices(tmp_path):
+    """The autotuner's persisted record reloads to the same execution
+    choices (ISSUE acceptance: TuningRecord reproduces choices on
+    reload) and drives fit_sbv without re-measuring."""
+    from repro.core.fit import fit_sbv
+    from repro.tuning import TuningRecord, as_record, autotune_loglik
+
+    x, y = skewed_data(seed=5, n_clusters=5)
+    cfg = SBVConfig(n_blocks=10, m=12)
+    rec = autotune_loglik(x, y, cfg, params=PAR, bucket_grid=(0, 2),
+                          tiers=("bf16", "f64"), repeats=1,
+                          save_dir=str(tmp_path))
+    back = TuningRecord.load(str(tmp_path))
+    assert back.to_dict() == rec.to_dict()
+    assert (back.n_buckets, back.precision, back.bucket_tiers) == \
+        (rec.n_buckets, rec.precision, rec.bucket_tiers)
+    assert len(rec.candidates) == 4  # 2 bucket levels x 2 tiers measured
+    assert as_record(str(tmp_path)).to_dict() == rec.to_dict()
+
+    res = fit_sbv(x, y, cfg, inner_steps=3, outer_rounds=1,
+                  tuning=str(tmp_path))
+    losses = [h[2] for h in res.history]
+    assert losses[-1] < losses[0]

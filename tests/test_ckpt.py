@@ -87,3 +87,42 @@ def test_crash_mid_save_leaves_no_partial(tmp_path):
     save_checkpoint(str(tmp_path), 1, state)
     os.makedirs(tmp_path / "step_00000002.tmp0/")  # simulated dead save
     assert latest_checkpoint(str(tmp_path)).endswith("step_00000001")
+
+
+def test_tuning_record_roundtrip(tmp_path):
+    """TuningRecord persists next to the checkpoints and reloads to the
+    exact same execution choices (dict-identical), from the directory or
+    the json file path; absent records read as None, newer versions
+    refuse to load."""
+    import pytest
+
+    from repro.ckpt import load_tuning_record
+    from repro.tuning import TuningRecord, as_record
+
+    assert load_tuning_record(str(tmp_path)) is None
+    assert TuningRecord.load(str(tmp_path)) is None
+
+    rec = TuningRecord(
+        n_buckets=4, bs_ceilings=[16, 32], m_ceilings=[30, 30],
+        bs_mult=16, m_mult=128, backend="auto", precision="bf16",
+        bucket_tiers=["bf16", "f64"], error_budget=None, stream_chunk=65536,
+        device_cache_budget=1 << 30, occupancy=0.71,
+        histogram={"bs": {"min": 3, "p50": 12, "max": 31, "mean": 13.0}},
+        candidates=[{"n_buckets": 4, "precision": "bf16", "time_s": 0.01}],
+        meta={"device": "cpu", "n_rows": 100000},
+    )
+    path = rec.save(str(tmp_path))
+    assert os.path.basename(path) == "tuning_record.json"
+
+    for src in (str(tmp_path), path):
+        back = TuningRecord.load(src)
+        assert back is not None and back.to_dict() == rec.to_dict()
+        assert as_record(src).to_dict() == rec.to_dict()
+    # a crashed write never corrupts the record: only the final name loads
+    assert not any(f.endswith(".tmp") for f in os.listdir(tmp_path))
+
+    newer = dict(rec.to_dict(), version=rec.version + 1)
+    with pytest.raises(ValueError):
+        TuningRecord.from_dict(newer)
+    with pytest.raises(FileNotFoundError):
+        as_record(str(tmp_path / "nope"))
