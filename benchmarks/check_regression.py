@@ -124,6 +124,23 @@ SPECS: dict[str, list[Metric]] = {
         Metric("reload_mismatch", "bound", bound=0.0),
         Metric("hard_demotions", "floor", tol=0.0),
     ],
+    # Multi-output emulation (the CI 'multioutput' gate): the cost claim
+    # is a same-run ratio — batched P-output fit+predict over P
+    # independent single-output fits — so it holds on any host, and the
+    # parity metrics are pure math on shared structure. The benchmark
+    # itself asserts the hard acceptance thresholds (< 0.5, <= 1e-8);
+    # the bound gates re-check them from the saved payload and the
+    # ceiling catches gradual erosion of the committed margin (warn
+    # only: at smoke sizes the batched side is seconds, so the ratio is
+    # noisy). Absolute wall times are deliberately ungated.
+    "fig7_multioutput": [
+        Metric("cost_ratio_multi_vs_independent", "bound", bound=0.5),
+        Metric("cost_ratio_multi_vs_independent", "ceiling", tol=0.50,
+               warn_only=True),
+        Metric("ll_parity_rel", "bound", bound=1e-8),
+        Metric("predict_parity_rel", "bound", bound=1e-8),
+        Metric("rows[path=multi].time_s", "time", tol=0.30, warn_only=True),
+    ],
     # Multi-process streaming fit (the CI 'distributed' gate): every
     # metric here is a parity bound or a same-run ratio — nothing
     # absolute-time, so the gate is meaningful on any shared CI host.

@@ -2,8 +2,19 @@
 
 RMSPE decreases with m_est/m_pred; estimated relevance of dh and dr is ~0
 (they do not influence accumulated hospitalizations in the simulator).
+
+``--outputs P`` switches to the multi-output mode (docs/multioutput.md):
+the MetaRVM trajectory snapshotted at P days is emulated once through the
+shared-structure batched fit and compared against P independent
+single-output fits — same structure work done once vs P times, one
+Cholesky per block reused for all P quadratic forms. The saved
+``fig7_multioutput`` payload gates the cost RATIO (batched / sum of
+independent) and the per-output likelihood/prediction parity — never
+absolute wall times (benchmarks/check_regression.py).
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -12,14 +23,131 @@ from repro.core.pipeline import SBVConfig
 from repro.core.predict import predict_sbv, rmspe
 from repro.data.gp_sim import METARVM_BOUNDS, metarvm_dataset
 
-from .common import parser, save, table
+from .common import calibrate, parser, save, table
 
 PARAMS = list(METARVM_BOUNDS)
 
 
+def multioutput_mode(args) -> dict:
+    """Batched P-output emulation vs P independent single-output fits."""
+    import jax.numpy as jnp
+
+    from repro.core.multioutput import multi_loglik
+    from repro.core.pipeline import preprocess
+    from repro.core.vecchia import packed_loglik
+    from repro.data.gp_sim import metarvm_field_dataset
+
+    p = args.outputs
+    if args.scale == "smoke":
+        n, bs, m = 1_200, 10, 20
+        inner_steps, outer_rounds = 4, 1
+        bs_pred, m_pred = 8, 40
+    else:
+        n, bs, m = 200_000, 100, 100
+        inner_steps, outer_rounds = 30, 2
+        bs_pred, m_pred = 25, 200
+
+    x, y = metarvm_field_dataset(args.seed, n, p=p)
+    n_test = n // 10
+    x_tr, y_tr = x[:-n_test], y[:-n_test]
+    x_te = x[-n_test:]
+    mu = y_tr.mean(axis=0)
+    y_tr_c = y_tr - mu
+    cfg = SBVConfig(n_blocks=max(1, len(y_tr) // bs), m=m, seed=args.seed)
+    fit_kw = dict(inner_steps=inner_steps, outer_rounds=outer_rounds)
+
+    # Warm the jit caches on a throwaway round so both sides time
+    # steady-state math, not compilation (the batched and per-output
+    # programs compile different shapes; warm both).
+    fit_sbv(x_tr, y_tr_c, cfg, inner_steps=1, outer_rounds=1)
+    fit_sbv(x_tr, y_tr_c[:, 0], cfg, inner_steps=1, outer_rounds=1)
+
+    t0 = time.time()
+    res_multi = fit_sbv(x_tr, y_tr_c, cfg, **fit_kw)
+    pred_multi = predict_sbv(res_multi.params, x_tr, y_tr_c, x_te,
+                             bs_pred=bs_pred, m_pred=m_pred, n_sims=2,
+                             seed=args.seed)
+    t_multi = time.time() - t0
+
+    t0 = time.time()
+    preds_ind = []
+    for j in range(p):
+        res_j = fit_sbv(x_tr, y_tr_c[:, j], cfg, **fit_kw)
+        preds_ind.append(predict_sbv(res_j.params, x_tr, y_tr_c[:, j], x_te,
+                                     bs_pred=bs_pred, m_pred=m_pred, n_sims=2,
+                                     seed=args.seed))
+    t_indep = time.time() - t0
+    ratio = t_multi / t_indep
+
+    # Parity at the FITTED multi params (shared structure): the batched
+    # per-output likelihood vector must match p single-output passes, and
+    # the batched prediction must match p per-output predictions — both
+    # on the same structure, so the diffs are pure-math, host-independent.
+    params = res_multi.params
+    ll_single = jnp.stack([
+        packed_loglik(params.output_params(j),
+                      preprocess(x_tr, y_tr_c[:, j], params.beta, cfg)[0])
+        for j in range(p)
+    ])
+    packed_m, _ = preprocess(x_tr, y_tr_c, params.beta, cfg)
+    ll_multi = multi_loglik(params, packed_m)
+    ll_parity = float(jnp.max(jnp.abs(ll_multi - ll_single)
+                              / jnp.maximum(jnp.abs(ll_single), 1.0)))
+
+    pred_parity = 0.0
+    for j in range(p):
+        pred_j = predict_sbv(params.output_params(j), x_tr, y_tr_c[:, j],
+                             x_te, bs_pred=bs_pred, m_pred=m_pred, n_sims=2,
+                             seed=args.seed)
+        scale_mu = max(float(np.max(np.abs(pred_j.mean))), 1.0)
+        pred_parity = max(
+            pred_parity,
+            float(np.max(np.abs(pred_multi.mean[:, j] - pred_j.mean)))
+            / scale_mu,
+            float(np.max(np.abs(pred_multi.var[:, j] - pred_j.var)))
+            / max(float(np.max(np.abs(pred_j.var))), 1.0),
+        )
+
+    rows = [
+        {"path": "multi", "time_s": t_multi, "outputs": p},
+        {"path": "independent", "time_s": t_indep, "outputs": p},
+    ]
+    table(rows + [{"path": "ratio", "time_s": ratio}],
+          ["path", "time_s", "outputs"],
+          f"Fig. 7 multi-output: batched vs {p} independent fits")
+    print(f"[fig7] ll parity (rel) {ll_parity:.3g}, "
+          f"predict parity (rel) {pred_parity:.3g}")
+
+    payload = {
+        "outputs": p, "n": n, "rows": rows,
+        "cost_ratio_multi_vs_independent": ratio,
+        "ll_parity_rel": ll_parity,
+        "predict_parity_rel": pred_parity,
+        "calib_s": calibrate(),
+    }
+    save("fig7_multioutput", payload)
+
+    # Acceptance: sublinear-in-p cost — the batched fit+predict must beat
+    # HALF the cost of p independent fits; parity must hold to 1e-8.
+    assert ratio < 0.5, (
+        f"batched {p}-output cost {t_multi:.2f}s is not < 0.5x the "
+        f"{p} independent fits' {t_indep:.2f}s (ratio {ratio:.3f})")
+    assert ll_parity <= 1e-8, ll_parity
+    assert pred_parity <= 1e-8, pred_parity
+    print("[fig7] multi-output cost + parity acceptance: OK")
+    return payload
+
+
 def main(argv=None):
     ap = parser("fig7")
+    ap.add_argument("--outputs", type=int, default=0, metavar="P",
+                    help="run the multi-output mode: emulate the MetaRVM "
+                         "trajectory at P snapshot days via the shared-"
+                         "structure batched fit and gate its cost ratio "
+                         "against P independent fits (docs/multioutput.md)")
     args = ap.parse_args(argv)
+    if args.outputs > 1:
+        return multioutput_mode(args)
     if args.scale == "smoke":
         n, m_list, bs = 4_000, (10, 20, 40), 10
     else:

@@ -30,7 +30,7 @@ from .vecchia import packed_loglik
 
 @dataclass
 class FitResult:
-    params: KernelParams
+    params: KernelParams  # or MultiOutputParams (multi-output fits)
     history: list = field(default_factory=list)  # (outer, inner, -loglik/n)
     packed: object = None
     stream_stats: dict | None = None  # set by the streaming (out-of-core) path
@@ -135,6 +135,211 @@ def _chunk_grad_fn(nu: float, backend: str, n_points: int, mesh=None,
         return -fn(params, *arrs) / n_points
 
     return jax.jit(jax.value_and_grad(f))
+
+
+def _fit_sbv_multi(
+    x, y, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
+    n_buckets,
+):
+    """Monolithic multi-output fit (docs/multioutput.md).
+
+    One structure pass per outer round shared by all p outputs; Adam
+    minimizes the pooled profile likelihood over (log_beta, log_tau2)
+    through the shared-Cholesky stats; per-output sigma2 are profiled in
+    closed form at the end (their gradient in the pooled objective is
+    identically zero, so they simply ride along in the pytree)."""
+    from .multioutput import (
+        as_multi_params, MultiOutputParams, multi_profile_neg_loglik_fn,
+        with_profiled_sigma2,
+    )
+
+    d = x.shape[1]
+    p = y.shape[1]
+    if init is None:
+        params = MultiOutputParams.create(
+            sigma2=np.maximum(np.var(y, axis=0), 1e-12), beta=0.5, tau2=1e-3,
+            d=d, p=p,
+        )
+    else:
+        params = as_multi_params(init, p, d)
+    history = []
+    packed = None
+
+    for outer in range(outer_rounds):
+        beta_np = np.asarray(params.beta)
+        packed, _ = preprocess(x, y, beta_np, cfg)
+        if n_buckets:
+            from .buckets import bucket_blocks
+
+            packed = bucket_blocks(packed, n_buckets=n_buckets)
+        grad_fn = jax.jit(jax.value_and_grad(
+            multi_profile_neg_loglik_fn(packed, nu, backend)))
+
+        state = adam_init(params)
+        for it in range(inner_steps):
+            loss, g = grad_fn(params)
+            params, state = adam_update(g, state, params, lr)
+            history.append((outer, it, float(loss)))
+            if verbose and it % 10 == 0:
+                print(f"[fit-multi] outer={outer} it={it} "
+                      f"nll/np={float(loss):.6f} p={p}")
+    params = with_profiled_sigma2(params, packed, nu=nu, backend=backend)
+    return FitResult(params=params, history=history, packed=packed)
+
+
+@functools.lru_cache(maxsize=64)
+def _multi_stats_chunk_fn(nu: float, backend: str):
+    """jitted (params, *arrs) -> (logdet0, q0) of one spooled chunk.
+
+    Ref backend mirrors ``_chunk_loglik``'s memory ceiling: the
+    checkpointed per-block stats run under ``lax.map`` in _MAP_BATCH
+    steps, so the live set never scales with the chunk block count."""
+    from .multioutput import _block_multi_stats_one
+
+    def f(params, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
+        from .kernels_math import cast_params
+
+        p0 = cast_params(params.structure_params(), jnp.asarray(blk_y).dtype)
+        if backend == "ref":
+            body = jax.checkpoint(lambda a: _block_multi_stats_one(p0, nu, *a))
+            ld, q = jax.lax.map(
+                body, (blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask),
+                batch_size=_MAP_BATCH,
+            )
+            return jnp.sum(ld), jnp.sum(q, axis=0)
+        from repro.kernels import ops as kops
+
+        return kops.sbv_multi_stats(p0, blk_x, blk_y, blk_mask,
+                                    nn_x, nn_y, nn_mask, nu=nu)
+
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def _multi_wgrad_chunk_fn(nu: float, backend: str, n_points: int, p: int):
+    """jitted grad of one chunk's weighted-stats scalar.
+
+    The pooled profile objective takes logs of GLOBAL sums, so chunked
+    accumulation is two passes per step: pass A sums (logdet0, q0) values
+    over the chunks; pass B accumulates the gradient of
+    ``(p*ld_c/2 + n/2 * sum_j q_cj / Q_j) / (n*p)`` with the weights
+    1/Q_j frozen at pass A's totals — by the chain rule the sum over
+    chunks is the EXACT gradient of the pooled objective."""
+    stats = _multi_stats_chunk_fn(nu, backend)
+
+    def f(params, w, *arrs):
+        ld_c, q_c = stats(params, *arrs)
+        s = 0.5 * p * ld_c + 0.5 * n_points * jnp.sum(w * q_c)
+        return s / (n_points * p)
+
+    return jax.jit(jax.grad(f))
+
+
+def _fit_sbv_multi_streaming(
+    store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
+    stream_chunk, spool_dir, device_cache=None, prefetch: int = 2,
+):
+    """Out-of-core multi-output fit: ``_fit_sbv_streaming``'s spool plan
+    with the two-pass chunk accumulation of ``_multi_wgrad_chunk_fn``.
+    Every pass holds ~stream_chunk data rows; blk_y/nn_y spool with their
+    (…, p) output axis through the same npz tiers."""
+    import shutil
+    import tempfile
+
+    from repro.data.streaming import (
+        device_cache_budget, pack_block_chunk, PackedChunkSpool,
+        streaming_preprocess,
+    )
+
+    from .multioutput import (
+        as_multi_params, MultiOutputParams, pooled_objective, profile_sigma2,
+    )
+
+    n = store.n_rows
+    d = store.d
+    y0 = np.asarray(store.read_slice(0, 1)[1])
+    if y0.ndim != 2:
+        raise ValueError("multi-output streaming fit needs (n, p) store rows")
+    p = int(y0.shape[1])
+    if init is None:
+        params = MultiOutputParams.create(sigma2=1.0, beta=0.5, tau2=1e-3,
+                                          d=d, p=p)
+    else:
+        params = as_multi_params(init, p, d)
+    history = []
+    stats = {"n_chunks": 0, "n_pieces": 0, "packed_chunk_bytes_max": 0,
+             "spool_bytes": 0, "bs_max": 0, "bc": 0, "n_shards": 1,
+             "n_outputs": p, "inner_steps_total": 0, "inner_time_s": 0.0}
+    final_q = None
+
+    for outer in range(outer_rounds):
+        beta_np = np.asarray(params.beta)
+        struct = streaming_preprocess(store, beta_np, cfg, stream_chunk)
+        bc_pad = max(len(r) for r in struct.plan)
+
+        if device_cache is None:
+            acc_bytes = int(np.dtype(cfg.dtype).itemsize)
+            reserve = 16 * _MAP_BATCH * (struct.bs_max + cfg.m) ** 2 * acc_bytes
+            budget = device_cache_budget(reserve_bytes=reserve)
+        else:
+            budget = int(device_cache)
+        work_dir = spool_dir or tempfile.mkdtemp(prefix="sbv-spool-")
+        spool = PackedChunkSpool(os.path.join(work_dir, f"round{outer}"),
+                                 device_budget=budget)
+        try:
+            for ranks in struct.plan:
+                packed = pack_block_chunk(
+                    store, struct.blocks, struct.neigh, ranks,
+                    m=cfg.m, bs_max=struct.bs_max, dtype=cfg.dtype,
+                )
+                spool.add(packed.pad_to_blocks(bc_pad),
+                          tag=_piece_backend(backend, packed))
+            stats.update(
+                n_chunks=len(struct.plan), n_pieces=len(spool),
+                packed_chunk_bytes_max=max(stats["packed_chunk_bytes_max"],
+                                           spool.packed_bytes_max),
+                spool_bytes=max(stats["spool_bytes"], spool.packed_bytes_total),
+                bs_max=struct.bs_max, bc=struct.blocks.n_blocks,
+            )
+
+            def chunk_stats(prms):
+                ld = None
+                q = None
+                for arrs, tag in spool.iter_arrays(prefetch=prefetch):
+                    ld_c, q_c = _multi_stats_chunk_fn(nu, tag)(prms, *arrs)
+                    ld = ld_c if ld is None else ld + ld_c
+                    q = q_c if q is None else q + q_c
+                return ld, q
+
+            state = adam_init(params)
+            t_inner = time.perf_counter()
+            for it in range(inner_steps):
+                ld, q = chunk_stats(params)
+                loss = pooled_objective(ld, q, n)
+                w = 1.0 / jnp.maximum(q, 1e-300)
+                grad = None
+                for arrs, tag in spool.iter_arrays(prefetch=prefetch):
+                    g = _multi_wgrad_chunk_fn(nu, tag, n, p)(params, w, *arrs)
+                    grad = g if grad is None else jax.tree.map(jnp.add, grad, g)
+                params, state = adam_update(grad, state, params, lr)
+                history.append((outer, it, float(loss)))
+                if verbose and it % 10 == 0:
+                    print(f"[fit-multi-stream] outer={outer} it={it} "
+                          f"nll/np={float(loss):.6f} pieces={len(spool)}")
+            # Profile the per-output scales at the ROUND-FINAL params (one
+            # extra values pass; the last round's result is the fit's).
+            _, final_q = chunk_stats(params)
+            stats["inner_time_s"] += time.perf_counter() - t_inner
+            stats["inner_steps_total"] += inner_steps
+        finally:
+            spool.cleanup()
+            if spool_dir is None:
+                shutil.rmtree(work_dir, ignore_errors=True)
+    s2 = jnp.maximum(
+        profile_sigma2(jnp.asarray(final_q, jnp.float64), n), 1e-300)
+    params = params._replace(log_sigma2=jnp.log(s2))
+    return FitResult(params=params, history=history, packed=None,
+                     stream_stats=stats)
 
 
 def _piece_backend(backend: str, piece) -> str:
@@ -577,6 +782,64 @@ def fit_sbv(
     if multihost is not None and not (is_store(x) or stream_chunk is not None):
         raise ValueError("multihost= requires the streaming path: pass a "
                          "row store and/or set stream_chunk")
+
+    # -- Multi-output routing (docs/multioutput.md). A 2-D y with p >= 2
+    # takes the shared-structure VPPE path; (n, 1) squeezes to the
+    # single-output program so p=1 stays BITWISE-identical to a 1-D y.
+    if not is_store(x) and y is not None and np.asarray(y).ndim == 2:
+        y2 = np.asarray(y)
+        if y2.shape[1] == 1:
+            from .multioutput import MultiOutputParams
+
+            init1 = (init.output_params(0)
+                     if isinstance(init, MultiOutputParams) else init)
+            return fit_sbv(
+                x, y2[:, 0], cfg, init=init1, nu=nu, lr=lr,
+                inner_steps=inner_steps, outer_rounds=outer_rounds,
+                backend=backend, verbose=verbose, distributed=distributed,
+                n_buckets=n_buckets, stream_chunk=stream_chunk,
+                spool_dir=spool_dir, device_cache=device_cache,
+                prefetch=prefetch, multihost=multihost, precision=precision,
+            )
+        if multihost is not None or distributed is not None:
+            raise NotImplementedError("multi-output fits do not support "
+                                      "multihost=/distributed= yet")
+        if precision is not None:
+            raise NotImplementedError("multi-output fits run at the packed "
+                                      "dtype; the precision ladder is not "
+                                      "wired in yet")
+        if stream_chunk is not None:
+            if n_buckets:
+                raise NotImplementedError("bucketed piece shapes are not "
+                                          "wired into the multi-output "
+                                          "streaming fit yet")
+            return _fit_sbv_multi_streaming(
+                as_store(x, y2), cfg, init, nu, lr, inner_steps, outer_rounds,
+                backend, verbose, stream_chunk, spool_dir,
+                device_cache=device_cache, prefetch=prefetch,
+            )
+        return _fit_sbv_multi(x, y2, cfg, init, nu, lr, inner_steps,
+                              outer_rounds, backend, verbose, n_buckets)
+    if is_store(x) and np.asarray(as_store(x, y).read_slice(0, 1)[1]).ndim == 2:
+        if multihost is not None or distributed is not None:
+            raise NotImplementedError("multi-output fits do not support "
+                                      "multihost=/distributed= yet")
+        if precision is not None:
+            raise NotImplementedError("multi-output fits run at the packed "
+                                      "dtype; the precision ladder is not "
+                                      "wired in yet")
+        if n_buckets:
+            raise NotImplementedError("bucketed piece shapes are not wired "
+                                      "into the multi-output streaming fit "
+                                      "yet")
+        from repro.data.streaming import DEFAULT_STRUCT_BATCH
+
+        return _fit_sbv_multi_streaming(
+            as_store(x, y), cfg, init, nu, lr, inner_steps, outer_rounds,
+            backend, verbose, stream_chunk or DEFAULT_STRUCT_BATCH, spool_dir,
+            device_cache=device_cache, prefetch=prefetch,
+        )
+
     if is_store(x) or stream_chunk is not None:
         from repro.data.streaming import DEFAULT_STRUCT_BATCH
 

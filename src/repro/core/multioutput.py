@@ -1,0 +1,247 @@
+"""Multi-output SBV: one structure, batched per-output likelihoods (VPPE).
+
+Parallel partial emulation (PAPERS.md, arXiv 2508.19144) extends Scaled
+Vecchia to simulators that emit a whole output field per run: all p
+outputs share ONE input scaling beta and ONE block/neighbor structure,
+and differ only in their marginal variance. The parameterization here is
+
+    K_j = sigma2_j * ( R(beta) + tau2 * I )        for output j,
+
+i.e. a shared unit-variance correlation R with a shared RELATIVE nugget
+tau2 and a per-output scale sigma2_j (absolute nugget nugget_j =
+tau2 * sigma2_j). Every per-block conditional then factorizes through
+the SAME Cholesky of the unit-variance joint covariance:
+
+    chol_j = sqrt(sigma2_j) * chol0
+    logdet_j = bs * log(sigma2_j) + logdet0
+    q_j = q0_j / sigma2_j            (q0_j from one (m+bs, p)-RHS solve)
+
+so one POTRF per block serves all p outputs and the per-output work is a
+multi-column TRSV — exactly the batched-GEMM shape the packed/bucketed
+layout already speaks; cost is sublinear in p vs p independent fits.
+
+The per-output scales are PROFILED in closed form (sigma2_j = Q_j / n),
+leaving a pooled profile likelihood over (log_beta, log_tau2):
+
+    2 * nll(beta, tau2) = p*n*log(2 pi) + p*logdet0
+                          + n * sum_j log(Q_j / n) + n*p .
+
+``docs/multioutput.md`` states the full contract (shared structure,
+p=1 bitwise guarantee, serving output masks).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels_math import KernelParams
+from .vecchia import _LOG2PI, _masked_cov
+
+
+class MultiOutputParams(NamedTuple):
+    """Shared-structure multi-output kernel parameters (log scale).
+
+    ``log_sigma2`` is (p,) — one marginal variance per output;
+    ``log_beta`` is the SHARED (d,) input scaling; ``log_tau2`` the
+    shared relative nugget (nugget_j = tau2 * sigma2_j). A NamedTuple so
+    it is a pytree: jitted programs trace it, the checkpoint flattener
+    round-trips it, and ``cast`` is a tree_map."""
+
+    log_sigma2: jnp.ndarray  # (p,)
+    log_beta: jnp.ndarray    # (d,)
+    log_tau2: jnp.ndarray    # scalar
+
+    @property
+    def sigma2(self):
+        return jnp.exp(self.log_sigma2)
+
+    @property
+    def beta(self):
+        return jnp.exp(self.log_beta)
+
+    @property
+    def tau2(self):
+        return jnp.exp(self.log_tau2)
+
+    @property
+    def nugget(self):
+        return jnp.exp(self.log_tau2 + self.log_sigma2)  # (p,) absolute
+
+    @property
+    def n_outputs(self) -> int:
+        return int(self.log_sigma2.shape[0])
+
+    @classmethod
+    def create(cls, sigma2, beta, tau2, d: int, p: int) -> "MultiOutputParams":
+        sigma2 = jnp.broadcast_to(jnp.asarray(sigma2, jnp.float64), (p,))
+        beta = jnp.broadcast_to(jnp.asarray(beta, jnp.float64), (d,))
+        return cls(
+            log_sigma2=jnp.log(sigma2),
+            log_beta=jnp.log(beta),
+            log_tau2=jnp.log(jnp.asarray(tau2, jnp.float64)),
+        )
+
+    def output_params(self, j: int) -> KernelParams:
+        """The equivalent single-output ``KernelParams`` for output j."""
+        return KernelParams(
+            log_sigma2=self.log_sigma2[j],
+            log_beta=self.log_beta,
+            log_nugget=self.log_tau2 + self.log_sigma2[j],
+        )
+
+    def structure_params(self) -> KernelParams:
+        """Unit-variance correlation params: sigma2=1, nugget=tau2.
+
+        All shared-Cholesky math (stats, prediction) runs on these; the
+        per-output sigma2 re-enter as closed-form scalings."""
+        return KernelParams(
+            log_sigma2=jnp.zeros((), self.log_beta.dtype),
+            log_beta=self.log_beta,
+            log_nugget=self.log_tau2,
+        )
+
+
+def _cast_multi(params: MultiOutputParams, dtype) -> MultiOutputParams:
+    """Differentiable down-cast (precision ladder), like ``cast_params``."""
+    return jax.tree.map(lambda a: jnp.asarray(a, dtype), params)
+
+
+def _block_multi_stats_one(params0, nu, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask):
+    """(logdet0, q0) of ONE block from the shared unit-variance Cholesky.
+
+    ``blk_y`` is (bs, p) and ``nn_y`` (m, p): the joint-assembly solve of
+    ``_block_loglik_joint_one`` with a (m+bs, p) right-hand side — one
+    POTRF, p columns through the same TRSV. Identity padding keeps padded
+    rows exactly inert (unit diag, zero y), so the per-output stats equal
+    the single-output path's to machine precision."""
+    x = jnp.concatenate([nn_x, blk_x], axis=0)
+    mask = jnp.concatenate([nn_mask, blk_mask], axis=0)
+    yv = jnp.concatenate([jnp.where(nn_mask[:, None], nn_y, 0.0),
+                          jnp.where(blk_mask[:, None], blk_y, 0.0)], axis=0)
+    m = nn_x.shape[0]
+
+    sigma = _masked_cov(x, x, mask, mask, params0, nu, identity=True)
+    chol = jnp.linalg.cholesky(sigma)
+    v = jax.scipy.linalg.solve_triangular(chol, yv, lower=True)
+
+    vb = v[m:]
+    logdet0 = 2.0 * jnp.sum(jnp.where(blk_mask, jnp.log(jnp.diag(chol)[m:]), 0.0))
+    q0 = jnp.sum(vb * vb, axis=0)  # (p,)
+    return logdet0, q0
+
+
+@partial(jax.jit, static_argnames=("nu",))
+def batched_multi_stats(
+    params0: KernelParams,
+    blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+):
+    """Dataset totals (logdet0, q0 (p,)) over all packed blocks."""
+    ld, q = jax.vmap(
+        lambda a, b, c, d, e, f: _block_multi_stats_one(params0, nu, a, b, c, d, e, f)
+    )(blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+    return jnp.sum(ld), jnp.sum(q, axis=0)
+
+
+def packed_multi_stats(params: MultiOutputParams, packed, nu: float = 3.5,
+                       backend: str = "ref"):
+    """(logdet0, q0 (p,)) of a PackedBlocks OR BucketedBlocks dataset.
+
+    Mirrors ``packed_loglik``'s dispatch: ``ref`` is the vmapped jnp
+    path at the packed accumulation dtype; ``pallas`` the fused
+    multi-stats kernel (``kernels.ops.sbv_multi_stats``); ``auto``
+    resolves per batch shape. Bucketed inputs sum per-bucket stats."""
+    from .buckets import BucketedBlocks
+
+    if isinstance(packed, BucketedBlocks):
+        ld = q = None
+        for pk in packed.buckets:
+            ld_b, q_b = packed_multi_stats(params, pk, nu=nu, backend=backend)
+            ld = ld_b if ld is None else ld + ld_b
+            q = q_b if q is None else q + q_b
+        return ld, q
+    if backend == "auto":
+        from repro.kernels import ops as kops
+
+        backend = kops.select_backend(
+            packed.bs_max, packed.m, kind="loglik", dtype=packed.blk_x.dtype
+        )
+    arrs = tuple(jnp.asarray(a) for a in (
+        packed.blk_x, packed.blk_y, packed.blk_mask,
+        packed.nn_x, packed.nn_y, packed.nn_mask,
+    ))
+    if backend == "ref":
+        from .kernels_math import cast_params
+
+        acc = arrs[1].dtype
+        return batched_multi_stats(
+            cast_params(params.structure_params(), acc), *arrs, nu=nu
+        )
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.sbv_multi_stats(params.structure_params(), *arrs, nu=nu)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def multi_loglik(params: MultiOutputParams, packed, nu: float = 3.5,
+                 backend: str = "ref") -> jax.Array:
+    """Per-output log-likelihood vector (p,) from the shared stats.
+
+    Equals ``packed_loglik(params.output_params(j), packed_j)`` for every
+    output j on the same structure (pinned <= 1e-8 in
+    tests/test_multioutput.py)."""
+    logdet0, q0 = packed_multi_stats(params, packed, nu=nu, backend=backend)
+    n = packed.n_points
+    s2 = params.sigma2.astype(q0.dtype)
+    return (-0.5 * n * _LOG2PI - 0.5 * logdet0
+            - 0.5 * n * jnp.log(s2) - 0.5 * q0 / s2)
+
+
+def profile_sigma2(q0: jax.Array, n: int) -> jax.Array:
+    """Closed-form per-output MLE scale given unit-variance quadratics."""
+    return q0 / n
+
+
+def pooled_objective(logdet0, q0, n: int):
+    """Pooled profile nll per data point: the quantity the multi fit
+    minimizes over (log_beta, log_tau2); sigma2 is profiled out."""
+    p = q0.shape[0]
+    nll2 = (p * n * _LOG2PI + p * logdet0
+            + n * jnp.sum(jnp.log(q0 / n)) + n * p)
+    return 0.5 * nll2 / (n * p)
+
+
+def multi_profile_neg_loglik_fn(packed, nu: float, backend: str):
+    """loss(params) for the monolithic multi fit (autodiff-friendly)."""
+    n = packed.n_points
+
+    def f(params: MultiOutputParams):
+        logdet0, q0 = packed_multi_stats(params, packed, nu=nu, backend=backend)
+        return pooled_objective(logdet0, q0, n)
+
+    return f
+
+
+def with_profiled_sigma2(params: MultiOutputParams, packed, nu: float = 3.5,
+                         backend: str = "ref") -> MultiOutputParams:
+    """Return params with sigma2_j set to the closed-form profile MLE."""
+    _, q0 = packed_multi_stats(params, packed, nu=nu, backend=backend)
+    s2 = jnp.maximum(profile_sigma2(q0.astype(jnp.float64), packed.n_points),
+                     1e-300)
+    return params._replace(log_sigma2=jnp.log(s2))
+
+
+def as_multi_params(params, p: int, d: int) -> MultiOutputParams:
+    """Coerce a KernelParams (broadcast over outputs) or pass through."""
+    if isinstance(params, MultiOutputParams):
+        return params
+    if isinstance(params, KernelParams):
+        tau2 = params.nugget / params.sigma2
+        return MultiOutputParams.create(params.sigma2, params.beta, tau2,
+                                        d=d, p=p)
+    raise TypeError(f"cannot coerce {type(params).__name__} to MultiOutputParams")

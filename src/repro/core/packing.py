@@ -74,10 +74,10 @@ class PackedBlocks:
     """
 
     blk_x: np.ndarray    # (bc, bs_max, d)
-    blk_y: np.ndarray    # (bc, bs_max)
+    blk_y: np.ndarray    # (bc, bs_max) or (bc, bs_max, p) multi-output
     blk_mask: np.ndarray  # (bc, bs_max) bool
     nn_x: np.ndarray     # (bc, m, d)
-    nn_y: np.ndarray     # (bc, m)
+    nn_y: np.ndarray     # (bc, m) or (bc, m, p) multi-output
     nn_mask: np.ndarray  # (bc, m) bool
     owners: np.ndarray   # (bc,) worker id per block
 
@@ -96,6 +96,11 @@ class PackedBlocks:
     @property
     def n_points(self) -> int:
         return int(self.blk_mask.sum())
+
+    @property
+    def n_outputs(self) -> int:
+        """1 for the single-output layout, p for (bc, bs, p) observations."""
+        return 1 if self.blk_y.ndim == 2 else int(self.blk_y.shape[2])
 
     def pad_to_blocks(self, bc_target: int) -> "PackedBlocks":
         """Append fully-masked dummy blocks (for even sharding)."""
@@ -146,6 +151,11 @@ class PackedPrediction:
     @property
     def n_queries(self) -> int:
         return int(self.q_mask.sum())
+
+    @property
+    def n_outputs(self) -> int:
+        """1 for the single-output layout, p for (bc, m, p) observations."""
+        return 1 if self.nn_y.ndim == 2 else int(self.nn_y.shape[2])
 
     def arrays(self) -> tuple:
         """The five device operands of the batched predict kernels."""
@@ -211,7 +221,9 @@ def pack_prediction(
     q_mask = np.zeros((bc, bs_max), dtype=bool)
     q_idx = np.zeros((bc, bs_max), dtype=np.int32)
     nn_x = np.zeros((bc, m_pred, d), dtype=dtype)
-    nn_y = np.zeros((bc, m_pred), dtype=dtype)
+    # Multi-output observations ((n, p) y) carry their output axis into
+    # the packed layout; the 1-D layout is bitwise-unchanged.
+    nn_y = np.zeros((bc, m_pred) + y_train.shape[1:], dtype=dtype)
     nn_mask = np.zeros((bc, m_pred), dtype=bool)
     owners = np.zeros(bc, dtype=np.int32)
 
@@ -247,10 +259,12 @@ def pack_blocks(
         bs_max = max(mb.size for mb in blocks.members)
 
     blk_x = np.zeros((bc, bs_max, d), dtype=dtype)
-    blk_y = np.zeros((bc, bs_max), dtype=dtype)
+    # Multi-output observations ((n, p) y) carry their output axis into
+    # the packed layout; the 1-D layout is bitwise-unchanged.
+    blk_y = np.zeros((bc, bs_max) + y.shape[1:], dtype=dtype)
     blk_mask = np.zeros((bc, bs_max), dtype=bool)
     nn_x = np.zeros((bc, m, d), dtype=dtype)
-    nn_y = np.zeros((bc, m), dtype=dtype)
+    nn_y = np.zeros((bc, m) + y.shape[1:], dtype=dtype)
     nn_mask = np.zeros((bc, m), dtype=bool)
     owners = np.zeros(bc, dtype=np.int32)
 

@@ -38,10 +38,14 @@ from .vecchia import _masked_cov
 
 @dataclass
 class Prediction:
-    mean: np.ndarray       # (n*,) conditional mean mu_new
-    var: np.ndarray        # (n*,) conditional marginal variance
-    sim_mean: np.ndarray   # (n*,) conditional-simulation sample mean
-    ci_low: np.ndarray     # (n*,) 95% CI bounds from simulation
+    """Prediction fields are (n*,) for single-output training data and
+    (n*, p) when the training observations were (n, p) multi-output
+    (docs/multioutput.md)."""
+
+    mean: np.ndarray       # conditional mean mu_new
+    var: np.ndarray        # conditional marginal variance
+    sim_mean: np.ndarray   # conditional-simulation sample mean
+    ci_low: np.ndarray     # 95% CI bounds from simulation
     ci_high: np.ndarray
 
 
@@ -217,6 +221,27 @@ def iter_query_chunks(
         )
 
 
+def _predict_multi_one(params, nu, qx, qmask, nx, ny, nmask):
+    """Multi-output block conditional (docs/multioutput.md).
+
+    ``ny`` is (m, p). One Cholesky of the shared unit-variance
+    conditioning covariance serves all outputs: the mean is sigma2-free
+    (the per-output scale cancels in cross @ con^-1 @ y), so the p means
+    are just extra solve columns; the variance scales the shared
+    unit-variance conditional by each output's sigma2."""
+    p0 = params.structure_params()
+    sigma_con = _masked_cov(nx, nx, nmask, nmask, p0, nu, identity=True)
+    sigma_cross = _masked_cov(nx, qx, nmask, qmask, p0, nu, identity=False)
+    ynn = jnp.where(nmask[:, None], ny, 0.0)
+    chol = jnp.linalg.cholesky(sigma_con)
+    a = jax.scipy.linalg.solve_triangular(chol, sigma_cross, lower=True)
+    z = jax.scipy.linalg.solve_triangular(chol, ynn, lower=True)  # (m, p)
+    mu = a.T @ z                                                  # (bs, p)
+    var0 = (1.0 + params.tau2) - jnp.sum(a * a, axis=0)           # (bs,)
+    var = var0[:, None] * params.sigma2[None, :]
+    return mu, jnp.maximum(var, 1e-12)
+
+
 def _predict_one(params, nu, qx, qmask, nx, ny, nmask):
     sigma_con = _masked_cov(nx, nx, nmask, nmask, params, nu, identity=True)
     sigma_cross = _masked_cov(nx, qx, nmask, qmask, params, nu, identity=False)
@@ -245,7 +270,19 @@ def batched_block_predict(
     kernel on the given shapes), ``pallas_tiled`` (fused kernel on
     8x128-aligned tiles — the compiled f32 TPU serving path), ``auto``
     (resolved per batch shape by ``kernels.ops.select_backend`` — the
-    bucketed execution layer uses this to mix backends across buckets)."""
+    bucketed execution layer uses this to mix backends across buckets).
+
+    ``MultiOutputParams`` (with (bc, m, p) ``nn_y``) dispatches to the
+    shared-Cholesky multi-output conditional and returns (bc, bs, p)
+    mean/variance; the fused predict kernels stay single-output, so every
+    backend resolves to the vmapped program there (the shared solve is
+    already the dominant cost — see docs/multioutput.md)."""
+    from .multioutput import MultiOutputParams
+
+    if isinstance(params, MultiOutputParams):
+        return jax.vmap(
+            lambda a, b, c, d, e: _predict_multi_one(params, nu, a, b, c, d, e)
+        )(q_x, q_mask, nn_x, nn_y, nn_mask)
     if backend == "auto":
         from repro.kernels import ops as kops
 
@@ -363,6 +400,37 @@ def predict_sbv(
             tier = pol.tier
             dtype = acc_dtype(tier)  # queries pack at the accumulation width
 
+    # -- Multi-output routing (docs/multioutput.md): a 2-D training y
+    # keeps ONE training index / structure pass and scatters per-output
+    # columns. (n, 1) squeezes to the single-output program so p=1 stays
+    # BITWISE-identical to a 1-D y; p >= 2 coerces the params to the
+    # shared-structure MultiOutputParams form.
+    from .multioutput import as_multi_params, MultiOutputParams
+
+    n_outputs = 1
+    squeeze_back = False
+    if not is_store(x_train) and y_train is not None:
+        y_train = np.asarray(y_train)
+        if y_train.ndim == 2:
+            if y_train.shape[1] == 1:
+                y_train = y_train[:, 0]
+                squeeze_back = True
+                if isinstance(params, MultiOutputParams):
+                    params = params.output_params(0)
+            else:
+                n_outputs = y_train.shape[1]
+    elif is_store(x_train):
+        from repro.data.store import as_store
+
+        y0 = np.asarray(as_store(x_train, y_train).read_slice(0, 1)[1])
+        if y0.ndim == 2:
+            n_outputs = y0.shape[1]
+    if n_outputs > 1:
+        params = as_multi_params(params, n_outputs,
+                                 np.asarray(params.beta).shape[0])
+    elif isinstance(params, MultiOutputParams):
+        params = params.output_params(0)
+
     beta = np.asarray(params.beta if beta_struct is None else beta_struct)
     if is_store(x_test):
         n_test = x_test.n_rows
@@ -374,10 +442,11 @@ def predict_sbv(
     index = build_train_index(x_train, y_train, beta, m_pred, n_workers, seed,
                               stream_chunk=stream_chunk)
 
-    mean = np.zeros(n_test)
-    var = np.zeros(n_test)
-    sim_mean = np.zeros(n_test)
-    sim_std = np.zeros(n_test)
+    out_shape = (n_test,) if n_outputs == 1 else (n_test, n_outputs)
+    mean = np.zeros(out_shape)
+    var = np.zeros(out_shape)
+    sim_mean = np.zeros(out_shape)
+    sim_std = np.zeros(out_shape)
     key = jax.random.PRNGKey(seed)
 
     for ci, packed in iter_query_chunks(
@@ -409,6 +478,10 @@ def predict_sbv(
             scatter_packed(piece, (mu_b, mean), (var_b, var),
                            (sm_b, sim_mean), (ss_b, sim_std))
 
+    if squeeze_back:
+        # (n, 1) input: single-output math, multi-output result shape.
+        mean, var, sim_mean, sim_std = (
+            a[:, None] for a in (mean, var, sim_mean, sim_std))
     z975 = 1.959963984540054
     return Prediction(
         mean=mean, var=var, sim_mean=sim_mean,

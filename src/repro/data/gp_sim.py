@@ -201,3 +201,41 @@ def metarvm_dataset(seed: int, n: int, normalize: bool = True):
     if normalize:
         y = y / max(y.mean(), 1e-12)
     return x01, y
+
+
+def metarvm_field_simulate(theta: np.ndarray, p: int,
+                           days: int = 100) -> np.ndarray:
+    """The epidemic TRAJECTORY instead of its endpoint: accumulated
+    hospital admissions snapshotted at ``p`` evenly spaced days.
+
+    Returns (n, p) with column j the cumulative admissions through day
+    ``round((j+1) * days / p)`` — the last column is exactly
+    ``metarvm_simulate(theta, days)``. One simulator sweep produces all
+    p outputs, which is what makes this the natural multi-output
+    emulation target (docs/multioutput.md): the outputs share one input
+    space and one smoothness structure but differ in scale as the
+    epidemic accumulates."""
+    if p < 1:
+        raise ValueError(f"need p >= 1 output snapshots, got {p}")
+    th = np.atleast_2d(np.asarray(theta, dtype=np.float64))
+    snap_days = np.rint(np.arange(1, p + 1) * days / p).astype(int)
+    snap_days[-1] = days
+    out = np.zeros((th.shape[0], p))
+    for j, day in enumerate(snap_days):
+        out[:, j] = metarvm_simulate(th, days=int(day))
+    return out
+
+
+def metarvm_field_dataset(seed: int, n: int, p: int, days: int = 100,
+                          normalize: bool = True):
+    """Multi-output MetaRVM: (X in [0,1]^10, Y (n, p)) with each column
+    normalized to mean 1 (per-output scale is what the VPPE per-output
+    sigma2 absorbs — see docs/multioutput.md)."""
+    theta = metarvm_sample_inputs(seed, n)
+    y = metarvm_field_simulate(theta, p, days=days)
+    lo = np.array([b[0] for b in METARVM_BOUNDS.values()])
+    hi = np.array([b[1] for b in METARVM_BOUNDS.values()])
+    x01 = (theta - lo) / (hi - lo)
+    if normalize:
+        y = y / np.maximum(y.mean(axis=0), 1e-12)
+    return x01, y

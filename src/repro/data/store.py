@@ -56,8 +56,10 @@ class MemoryStore:
             raise ValueError(f"x must be (n, d), got shape {self.x.shape}")
         self.y = (np.zeros(self.x.shape[0]) if y is None
                   else np.asarray(y, dtype=np.float64))
-        if self.y.shape != (self.x.shape[0],):
-            raise ValueError(f"y must be ({self.x.shape[0]},), got {self.y.shape}")
+        # (n,) single-output or (n, p) multi-output observation rows.
+        if self.y.ndim not in (1, 2) or self.y.shape[0] != self.x.shape[0]:
+            raise ValueError(f"y must be ({self.x.shape[0]},) or "
+                             f"({self.x.shape[0]}, p), got {self.y.shape}")
 
     @property
     def n_rows(self) -> int:
@@ -126,8 +128,9 @@ class ArrayStoreWriter:
         y = np.ascontiguousarray(y, dtype=self.dtype)
         if x.ndim != 2 or x.shape[1] != self.d:
             raise ValueError(f"expected (k, {self.d}) rows, got {x.shape}")
-        if y.shape != (x.shape[0],):
-            raise ValueError(f"y shape {y.shape} != ({x.shape[0]},)")
+        if y.ndim not in (1, 2) or y.shape[0] != x.shape[0]:
+            raise ValueError(f"y shape {y.shape} != ({x.shape[0]},) or "
+                             f"({x.shape[0]}, p)")
         self._buf_x.append(x)
         self._buf_y.append(y)
         self._buf_rows += x.shape[0]

@@ -17,7 +17,7 @@ from repro.core.kernels_math import KernelParams
 from repro.core.vecchia import batched_block_loglik
 
 from .matern_cov import matern_cov_pallas
-from .sbv_loglik import sbv_loglik_pallas
+from .sbv_loglik import sbv_loglik_pallas, sbv_multi_stats_pallas
 from .sbv_predict import sbv_predict_pallas, sbv_predict_tiled
 
 
@@ -82,6 +82,57 @@ def _bwd(nu, res, g):
 
 
 sbv_loglik.defvjp(_fwd, _bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7,))
+def sbv_multi_stats(params0: KernelParams, blk_x, blk_y, blk_mask,
+                    nn_x, nn_y, nn_mask, nu=3.5):
+    """Multi-output dataset stats ``(logdet0, q0 (p,))`` via the fused
+    kernel: one Cholesky per block, all p outputs as extra RHS columns.
+
+    ``params0`` is the UNIT-VARIANCE correlation (sigma2=1, nugget=tau2,
+    see ``core.multioutput``). Differentiable like ``sbv_loglik``: the
+    forward pass is the fused kernel, the backward pass the VJP of the
+    pure-jnp reference."""
+    _, acc = ladder_dtypes(blk_x.dtype)
+    per_block = sbv_multi_stats_pallas(
+        params0.beta.astype(acc),
+        params0.sigma2.astype(acc),
+        params0.nugget.astype(acc),
+        blk_x, blk_y.astype(acc), blk_mask.astype(acc),
+        nn_x, nn_y.astype(acc), nn_mask.astype(acc),
+        nu=nu,
+    )
+    return jnp.sum(per_block[:, 0]), jnp.sum(per_block[:, 1:], axis=0)
+
+
+def _ms_fwd(params0, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu):
+    out = sbv_multi_stats(params0, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask, nu)
+    return out, (params0, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+
+
+def _ms_bwd(nu, res, g):
+    from repro.core.multioutput import batched_multi_stats
+
+    params0, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask = res
+    g_ld, g_q = g
+
+    def combo(p, by, ny):
+        ld, q = batched_multi_stats(
+            p, blk_x, by, blk_mask.astype(bool), nn_x, ny,
+            nn_mask.astype(bool), nu=nu,
+        )
+        return g_ld * ld + jnp.sum(g_q * q)
+
+    gp, gby, gny = jax.grad(combo, argnums=(0, 1, 2))(params0, blk_y, nn_y)
+    zeros_like = lambda a: jnp.zeros_like(a)
+    return (
+        gp, zeros_like(blk_x), gby, zeros_like(blk_mask),
+        zeros_like(nn_x), gny, zeros_like(nn_mask),
+    )
+
+
+sbv_multi_stats.defvjp(_ms_fwd, _ms_bwd)
 
 
 def select_backend(bs: int, m: int, kind: str = "predict", dtype=None) -> str:

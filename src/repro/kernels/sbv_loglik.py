@@ -184,6 +184,107 @@ def _sbv_kernel(
     out_ref[0] = ll
 
 
+def _sbv_multi_kernel(
+    beta_ref, scal_ref,
+    blk_x_ref, blk_y_ref, blk_m_ref, nn_x_ref, nn_y_ref, nn_m_ref,
+    out_ref,
+    *, nu: float, narrow_gemm: bool = False,
+):
+    """Multi-output per-block stats: ONE Cholesky, (m, bs+p) joint solve.
+
+    The single-output kernel's RHS ``[K_cross | y_nn]`` widens to
+    ``[K_cross | Y_nn]`` with Y (m, p) — the per-output work rides the
+    same substitution passes as extra columns (docs/multioutput.md).
+    Runs on the UNIT-VARIANCE correlation (sigma2=1, nugget=tau2); the
+    per-output scales re-enter in closed form outside the kernel.
+    Output row: [logdet0, q_1 .. q_p]."""
+    beta = beta_ref[...]
+    sigma2 = scal_ref[0]
+    nugget = scal_ref[1]
+    acc = beta.dtype
+
+    xb = blk_x_ref[0]
+    xn = nn_x_ref[0]
+    zb = xb / beta.astype(xb.dtype)
+    zn = xn / beta.astype(xn.dtype)
+    mb = blk_m_ref[0]                 # (bs,) float mask
+    mn = nn_m_ref[0]                  # (m,)
+    yb = blk_y_ref[0] * mb[:, None]   # (bs, p)
+    yn = nn_y_ref[0] * mn[:, None]    # (m, p)
+    bs = yb.shape[0]
+
+    k_con = _masked_cov_tile(zn, zn, mn, mn, sigma2, nugget, nu, identity=True,
+                             acc=acc, narrow_gemm=narrow_gemm)
+    k_cross = _masked_cov_tile(zn, zb, mn, mb, sigma2, nugget, nu,
+                               identity=False, acc=acc, narrow_gemm=narrow_gemm)
+    k_lk = _masked_cov_tile(zb, zb, mb, mb, sigma2, nugget, nu, identity=True,
+                            acc=acc, narrow_gemm=narrow_gemm)
+
+    if xb.dtype == acc:
+        floor = 1e-30
+    else:
+        floor = jnp.finfo(xb.dtype).eps * sigma2
+
+    l_con = _cholesky_inplace(k_con, floor=floor)
+    rhs = jnp.concatenate([k_cross, yn], axis=1)            # (m, bs+p)
+    sol = _forward_sub(l_con, rhs)
+    a = sol[:, :bs]                   # (m, bs)
+    z = sol[:, bs:]                   # (m, p)
+
+    sigma_new = k_lk - jnp.dot(a.T, a, preferred_element_type=a.dtype)
+    mu = jnp.dot(a.T, z, preferred_element_type=a.dtype)    # (bs, p)
+
+    l_new = _cholesky_inplace(sigma_new, floor=floor)
+    v = _forward_sub(l_new, yb - mu)                        # (bs, p)
+
+    diag = jnp.diagonal(l_new)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.maximum(diag, 1e-30)) * mb)
+    q = jnp.sum(v * v, axis=0)                              # (p,)
+    out_ref[0] = jnp.concatenate([jnp.reshape(logdet, (1,)), q])
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "interpret"))
+def sbv_multi_stats_pallas(
+    beta, sigma2, nugget,
+    blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask,
+    nu: float = 3.5,
+    interpret: bool | None = None,
+):
+    """Per-block multi-output stats, shape (bc, 1+p): column 0 is the
+    unit-variance logdet, columns 1..p the per-output quadratics. Same
+    dtype/precision contract as ``sbv_loglik_pallas``; observations are
+    (bc, bs, p) / (bc, m, p)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bc, bs, d = blk_x.shape
+    m = nn_x.shape[1]
+    p = blk_y.shape[2]
+    dtype = blk_y.dtype
+    scal = jnp.stack([jnp.asarray(sigma2, dtype), jnp.asarray(nugget, dtype)])
+    beta = jnp.asarray(beta, dtype)
+
+    grid = (bc,)
+    kernel = functools.partial(_sbv_multi_kernel, nu=nu,
+                               narrow_gemm=not interpret)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),            # beta (replicated)
+            pl.BlockSpec((2,), lambda i: (0,)),            # sigma2, nugget
+            pl.BlockSpec((1, bs, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bs, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1 + p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, 1 + p), dtype),
+        interpret=interpret,
+    )(beta, scal, blk_x, blk_y, blk_mask, nn_x, nn_y, nn_mask)
+
+
 @functools.partial(jax.jit, static_argnames=("nu", "interpret"))
 def sbv_loglik_pallas(
     beta, sigma2, nugget,

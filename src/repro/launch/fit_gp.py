@@ -39,10 +39,15 @@ import time
 import numpy as np
 
 
-def load_dataset(name: str, n: int, seed: int):
-    from repro.data.gp_sim import (metarvm_dataset, paper_synthetic,
-                                   satellite_drag_like)
+def load_dataset(name: str, n: int, seed: int, outputs: int = 1):
+    from repro.data.gp_sim import (metarvm_dataset, metarvm_field_dataset,
+                                   paper_synthetic, satellite_drag_like)
 
+    if outputs > 1:
+        if name != "metarvm":
+            raise SystemExit("--outputs > 1 requires --dataset metarvm "
+                             "(the multi-output field variant)")
+        return metarvm_field_dataset(seed, n, p=outputs)
     if name == "synthetic":
         x, y, params = paper_synthetic(seed, n)
         return x, y
@@ -58,6 +63,11 @@ def build_parser():
     ap.add_argument("--dataset", default="synthetic",
                     choices=["synthetic", "satdrag", "metarvm"])
     ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--outputs", type=int, default=1, metavar="P",
+                    help="emulate P outputs jointly through the shared-"
+                         "structure multi-output fit (docs/multioutput.md); "
+                         "metarvm only — snapshots the epidemic trajectory "
+                         "at P evenly spaced days")
     ap.add_argument("--blocks", type=int, default=400)
     ap.add_argument("--m", type=int, default=60)
     ap.add_argument("--m-pred", type=int, default=120)
@@ -286,6 +296,11 @@ def main(argv=None):
 
     ctx = MultihostContext.from_env()
     args = build_parser().parse_args(argv)
+    if args.outputs > 1 and (args.store or args.write_store
+                             or args.distributed_hosts):
+        raise SystemExit("--outputs > 1 runs the in-core multi-output fit; "
+                         "combine it with --stream-chunk for the streaming "
+                         "path, not --store/--write-store/--distributed-hosts")
 
     if ctx is not None:
         return _run_rank(ctx, args), None
@@ -371,11 +386,12 @@ def main(argv=None):
                            stream_chunk=args.stream_chunk)
         t_pred = time.time() - t0
     else:
-        x, y = load_dataset(args.dataset, args.n, args.seed)
-        n_test = int(len(y) * args.test_frac)
+        x, y = load_dataset(args.dataset, args.n, args.seed,
+                            outputs=args.outputs)
+        n_test = int(y.shape[0] * args.test_frac)
         x_tr, y_tr = x[:-n_test], y[:-n_test]
         x_te, y_te = x[-n_test:], y[-n_test:]
-        mu_y = y_tr.mean()
+        mu_y = y_tr.mean(axis=0)  # per-output centering (scalar when 1-D)
         y_tr_c, y_te_c = y_tr - mu_y, y_te - mu_y
 
         cfg = SBVConfig(n_blocks=args.blocks, m=args.m, n_workers=args.workers,
@@ -398,8 +414,15 @@ def main(argv=None):
                       precision=args.precision, tuning=tuning)
         t_fit = time.time() - t0
         beta = np.asarray(res.params.beta)
-        print(f"[fit_gp] fit {len(y_tr)} pts in {t_fit:.1f}s; "
-              f"sigma2={float(res.params.sigma2):.4f} nugget={float(res.params.nugget):.2e}")
+        sigma2 = np.asarray(res.params.sigma2)
+        nugget = np.asarray(res.params.nugget)
+        if sigma2.ndim:  # multi-output: per-output vectors
+            print(f"[fit_gp] fit {len(y_tr)} pts x {sigma2.size} outputs in "
+                  f"{t_fit:.1f}s; sigma2={np.round(sigma2, 4)} "
+                  f"tau2={float(res.params.tau2):.2e}")
+        else:
+            print(f"[fit_gp] fit {len(y_tr)} pts in {t_fit:.1f}s; "
+                  f"sigma2={float(sigma2):.4f} nugget={float(nugget):.2e}")
         print("[fit_gp] relevance 1/beta:", np.round(1.0 / beta, 3))
 
         t0 = time.time()
@@ -415,9 +438,9 @@ def main(argv=None):
     if args.result_json:
         payload = {"nll": float(res.history[-1][2]), "t_fit_s": t_fit,
                    "t_predict_s": t_pred, "mspe": mspe, "rmspe_pct": rmspe,
-                   "sigma2": float(res.params.sigma2),
+                   "sigma2": np.asarray(res.params.sigma2).tolist(),
                    "beta": np.asarray(res.params.beta).tolist(),
-                   "nugget": float(res.params.nugget)}
+                   "nugget": np.asarray(res.params.nugget).tolist()}
         with open(args.result_json, "w") as f:
             json.dump(payload, f, indent=1)
     return res, mspe

@@ -51,6 +51,10 @@ def serve_gp(argv=None):
     ap.add_argument("--dataset", default="synthetic",
                     choices=["synthetic", "satdrag", "metarvm"])
     ap.add_argument("--n-train", type=int, default=20_000)
+    ap.add_argument("--outputs", type=int, default=1, metavar="P",
+                    help="serve a P-output model (metarvm field variant; "
+                         "docs/multioutput.md) — requests carry an output "
+                         "mask and results are (n, P)")
     ap.add_argument("--n-test", type=int, default=100_000)
     ap.add_argument("--chunk", type=int, default=4096)
     ap.add_argument("--bs-pred", type=int, default=25)
@@ -146,6 +150,9 @@ def serve_gp(argv=None):
         SchedulerPolicy, predict_pipelined, predict_synchronous,
     )
 
+    if args.outputs > 1 and (args.train_store or args.dataset == "synthetic"):
+        raise SystemExit("--outputs > 1 requires --dataset metarvm "
+                         "(in-core; the multi-output field variant)")
     if args.train_store:
         from repro.data.store import ArrayStore
 
@@ -160,7 +167,8 @@ def serve_gp(argv=None):
     elif args.dataset == "synthetic":
         x, y, params = paper_synthetic(args.seed, args.n_train)
     else:
-        x, y = load_dataset(args.dataset, args.n_train, args.seed)
+        x, y = load_dataset(args.dataset, args.n_train, args.seed,
+                            outputs=args.outputs)
         from repro.core.fit import fit_sbv
         from repro.core.pipeline import SBVConfig
 
@@ -214,6 +222,17 @@ def serve_gp(argv=None):
                 for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
         results = [f.result() for f in futs]
         dt = time.time() - t0
+
+        if server.n_outputs > 1:
+            # Exercise the per-request output mask: a masked request's
+            # result carries just the requested columns.
+            fut = server.submit(x_test[:min(64, args.n_test)], slo=args.slo,
+                                outputs=[server.n_outputs - 1])
+            server.flush()
+            masked = fut.result()
+            assert masked.mean.shape[1] == 1, masked.mean.shape
+            print(f"[serve-gp] {server.n_outputs}-output model; masked "
+                  f"request returned {masked.mean.shape} (1 column)")
 
     def _arrays(res):
         return res.sink.materialize() if res.sink is not None \

@@ -145,6 +145,7 @@ class PredictRequest:
 
     x: np.ndarray
     future: Future
+    outputs: np.ndarray | None = None  # output-index mask (None = all outputs)
     trace: RequestTrace = field(init=False)
     t_arrival: float = field(init=False, default=0.0)  # batcher-clock stamp
 

@@ -103,6 +103,23 @@ def _n_rows(x_test) -> int:
     return int(np.asarray(x_test).shape[0])
 
 
+def n_outputs_of(params) -> int:
+    """Output count of a parameter set: 1 for ``KernelParams``, ``p`` for
+    ``MultiOutputParams`` (core/multioutput.py). The serving layer sizes
+    its result buffers off this so multi-output models flow through the
+    same chunk engine with ``(n, p)`` mean/var."""
+    from repro.core.multioutput import MultiOutputParams
+
+    if isinstance(params, MultiOutputParams):
+        return params.n_outputs
+    return 1
+
+
+def _result_zeros(n: int, n_outputs: int) -> tuple[np.ndarray, np.ndarray]:
+    shape = (n,) if n_outputs == 1 else (n, n_outputs)
+    return np.zeros(shape), np.zeros(shape)
+
+
 def make_chunk_split(cfg: PipelineConfig):
     """Return ``split(packed) -> [packed_piece, ...]`` — the host-side
     bucketing step of one chunk (the uniform layout is the one-piece
@@ -291,8 +308,7 @@ def predict_synchronous(
     ``x_test`` may be a row store; windows are then read on demand inside
     ``iter_query_chunks``."""
     n_test = _n_rows(x_test)
-    mean = np.zeros(n_test)
-    var = np.zeros(n_test)
+    mean, var = _result_zeros(n_test, n_outputs_of(params))
     split = make_chunk_split(cfg)
     compute = make_chunk_compute(params, cfg, mesh)
     for _, packed in _chunks(index, x_test, cfg, seed):
@@ -320,8 +336,7 @@ def predict_pipelined(
     ``x_test`` the producer also does the window READS off the critical
     path — IO overlaps device compute exactly like packing does."""
     n_test = _n_rows(x_test)
-    mean = np.zeros(n_test)
-    var = np.zeros(n_test)
+    mean, var = _result_zeros(n_test, n_outputs_of(params))
     if n_test == 0:
         return mean, var
 
@@ -349,10 +364,11 @@ class SpoolResultSink:
     ``materialize()`` reproduces the in-RAM result identically — the
     parity contract survives the disk hop."""
 
-    def __init__(self, path: str, n_points: int):
+    def __init__(self, path: str, n_points: int, n_outputs: int = 1):
         from repro.data.streaming import PackedChunkSpool
 
         self.n_points = int(n_points)
+        self.n_outputs = int(n_outputs)
         self._spool = PackedChunkSpool(path, device_budget=0,
                                        device_stage=False)
         self._n_added = 0
@@ -385,8 +401,7 @@ class SpoolResultSink:
     def materialize(self) -> tuple[np.ndarray, np.ndarray]:
         """Assemble the full (mean, var) in RAM — convenience for callers
         that decide the result fits after all."""
-        mean = np.zeros(self.n_points)
-        var = np.zeros(self.n_points)
+        mean, var = _result_zeros(self.n_points, self.n_outputs)
         for idx, mu, vr in self.iter_chunks():
             mean[idx] = mu
             var[idx] = vr

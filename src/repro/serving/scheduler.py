@@ -131,11 +131,13 @@ class ContinuousScheduler:
         stats=None,
         result_factory=None,
         sink_factory=None,
+        n_outputs: int = 1,
     ):
         self.policy = policy or SchedulerPolicy()
         self.window_policy = window or BatchingPolicy()
         self.chunk_size = chunk_size
         self.bs_pred = bs_pred
+        self.n_outputs = int(n_outputs)
         self._clock = clock
         self.stats = stats
         self._result_factory = result_factory or _default_result
@@ -416,8 +418,9 @@ class ContinuousScheduler:
         if thr is not None and n >= thr:
             e.sink = self._make_sink(req)
         else:
-            e.mean = np.zeros(n)
-            e.var = np.zeros(n)
+            shape = (n,) if self.n_outputs == 1 else (n, self.n_outputs)
+            e.mean = np.zeros(shape)
+            e.var = np.zeros(shape)
         if not self._active[cls.name]:
             # Newly backlogged class enters at the running batch's
             # virtual time — this is what lets interactive arrivals
@@ -464,4 +467,5 @@ class ContinuousScheduler:
                                 or tempfile.mkdtemp(prefix="sbv-serve-sink-"))
         self._sink_seq += 1
         path = os.path.join(self._spool_root, f"req_{self._sink_seq:06d}")
-        return SpoolResultSink(path, int(req.x.shape[0]))
+        return SpoolResultSink(path, int(req.x.shape[0]),
+                               n_outputs=self.n_outputs)

@@ -41,11 +41,25 @@ from .batching import (
     ServeRequest, concat_requests,
 )
 from .pipeline import (
-    PipelineConfig, pack_scheduled, predict_pipelined, predict_synchronous,
-    run_chunk_stream,
+    PipelineConfig, n_outputs_of, pack_scheduled, predict_pipelined,
+    predict_synchronous, run_chunk_stream,
 )
 from .scheduler import ContinuousScheduler
 from .telemetry import ServerStats, now
+
+
+def _mask_outputs(arr, outputs, copy: bool = True):
+    """Gather a request's output columns from a full-output result array.
+
+    ``outputs=None`` (or a 1-D single-output array) passes through; a
+    fancy-index gather copies by construction, so ``copy`` only governs
+    the pass-through path (the drain loop hands out slices of a shared
+    batch buffer and must copy; scheduler entries own their buffers)."""
+    if arr is None:
+        return None
+    if outputs is not None and arr.ndim == 2:
+        return arr[:, outputs]
+    return arr.copy() if copy else arr
 
 
 @dataclass
@@ -122,6 +136,7 @@ class GPServer:
                 stream_chunk=cfg.stream_chunk,
             )
         self.d = self.index.x.shape[1]
+        self.n_outputs = n_outputs_of(params)
         self._batcher = MicroBatcher(self.config.policy)
         self._sched: ContinuousScheduler | None = None
         self._thread: threading.Thread | None = None
@@ -136,6 +151,7 @@ class GPServer:
             bs_pred=cfg.bs_pred,
             stats=self.stats,
             result_factory=self._make_result,
+            n_outputs=self.n_outputs,
         )
 
     # -- lifecycle -----------------------------------------------------
@@ -193,13 +209,42 @@ class GPServer:
 
     # -- request path --------------------------------------------------
 
-    def submit(self, x: np.ndarray, slo: str = "interactive") -> Future:
+    def _norm_outputs(self, outputs) -> np.ndarray | None:
+        """Validate an output-index mask against the model's output count.
+
+        ``None`` means all outputs. A mask that selects every output in
+        order collapses back to ``None`` (no column gather on the result
+        path — keeps single-output requests bitwise untouched)."""
+        if outputs is None:
+            return None
+        out = np.atleast_1d(np.asarray(outputs, dtype=np.intp))
+        if out.ndim != 1 or out.size == 0:
+            raise ValueError("outputs must be a non-empty 1-D index list")
+        if out.min() < 0 or out.max() >= self.n_outputs:
+            raise ValueError(
+                f"output indices must lie in [0, {self.n_outputs}); "
+                f"got {outputs!r}"
+            )
+        if out.size == self.n_outputs and np.array_equal(
+                out, np.arange(self.n_outputs)):
+            return None
+        return out
+
+    def submit(self, x: np.ndarray, slo: str = "interactive",
+               outputs=None) -> Future:
         """Enqueue a predict request; resolves to a ``ServeResult``.
 
         ``slo`` picks the request's service class in continuous-scheduler
         mode (``SchedulerPolicy.classes``; default classes are
         ``interactive`` and ``bulk``) and is ignored in drain mode. May
-        raise ``AdmissionQueueFull`` under backpressure."""
+        raise ``AdmissionQueueFull`` under backpressure.
+
+        ``outputs`` (multi-output models only) is an output-index mask:
+        the result's mean/var carry just those columns, in the order
+        given. Compute is unaffected — the shared Cholesky already pays
+        for all p outputs (docs/multioutput.md), so the server computes
+        everything and slices per request. Spool-backed bulk results
+        (``ServeResult.sink``) always carry all outputs."""
         if self._thread is None:
             raise RuntimeError("GPServer.submit before start()")
         x = np.array(x, dtype=np.float64, copy=True)
@@ -207,11 +252,12 @@ class GPServer:
             x = x[None, :]
         if x.ndim != 2 or x.shape[1] != self.d:
             raise ValueError(f"expected (n, {self.d}) queries, got {x.shape}")
+        out = self._norm_outputs(outputs)
         if self._sched is not None:
-            req = ServeRequest(x=x, future=Future(), slo=slo)
+            req = ServeRequest(x=x, future=Future(), outputs=out, slo=slo)
             self._sched.submit(req)
         else:
-            req = PredictRequest(x=x, future=Future())
+            req = PredictRequest(x=x, future=Future(), outputs=out)
             self._batcher.put(req)
         return req.future
 
@@ -302,7 +348,8 @@ class GPServer:
             req.trace.t_done = t_done
             self.stats.record_request(req.trace)
             req.future.set_result(ServeResult(
-                mean=mean[sl].copy(), var=var[sl].copy(),
+                mean=_mask_outputs(mean[sl], req.outputs),
+                var=_mask_outputs(var[sl], req.outputs),
                 latency_s=req.trace.latency_s,
                 queue_wait_s=req.trace.queue_wait_s,
             ))
@@ -311,8 +358,10 @@ class GPServer:
 
     def _make_result(self, entry) -> ServeResult:
         trace = entry.req.trace
+        out = entry.req.outputs
         mean, var = ((None, None) if entry.sink is not None
-                     else (entry.mean, entry.var))
+                     else (_mask_outputs(entry.mean, out, copy=False),
+                           _mask_outputs(entry.var, out, copy=False)))
         return ServeResult(
             mean=mean, var=var,
             latency_s=trace.latency_s, queue_wait_s=trace.queue_wait_s,

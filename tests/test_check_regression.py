@@ -1,0 +1,233 @@
+"""The benchmark-regression gate itself (benchmarks/check_regression.py).
+
+Every CI gate that compares a fresh smoke run against a committed
+baseline routes through this one script, so its tolerance directions are
+load-bearing: a 'time' metric that treated slower as better, or a
+'bound' that silently skipped a missing metric, would turn every
+benchmark gate green forever. Tier-1 (no marker): the gate logic is pure
+Python and must stay correct even when the specialty gates are skipped.
+"""
+import json
+
+import pytest
+
+import benchmarks.check_regression as cr
+from benchmarks.check_regression import (SPECS, Metric, check_benchmark,
+                                         lookup, main)
+
+
+def _statuses(rows):
+    return {(spec.path, spec.kind): status for spec, status, _ in rows}
+
+
+def _one(name, fresh, base):
+    rows = check_benchmark(name, fresh, base)
+    assert len(rows) == len(cr.SPECS[name])
+    return _statuses(rows)
+
+
+# -- path lookup -----------------------------------------------------------
+
+
+def test_lookup_dotted_and_row_paths():
+    payload = {
+        "a": {"b": 3.0},
+        "rows": [{"path": "sync", "time_s": 1.0},
+                 {"path": "loglik/bucketed", "time_s": 2.0}],
+    }
+    assert lookup(payload, "a.b") == 3.0
+    assert lookup(payload, "rows[path=sync].time_s") == 1.0
+    assert lookup(payload, "rows[path=loglik/bucketed].time_s") == 2.0
+    assert lookup(payload, "a.missing") is None
+    assert lookup(payload, "rows[path=nope].time_s") is None
+    assert lookup(payload, "missing.b") is None
+
+
+# -- tolerance directions, one kind at a time ------------------------------
+
+
+@pytest.fixture()
+def spec_sandbox(monkeypatch):
+    """Install a minimal spec so direction tests don't depend on the real
+    benchmark schemas."""
+    specs = {
+        "toy": [
+            Metric("t", "time", tol=0.10),
+            Metric("quality", "floor", tol=0.10),
+            Metric("rss", "ceiling", tol=0.10),
+            Metric("parity", "bound", bound=1e-8),
+            Metric("noisy", "floor", tol=0.10, warn_only=True),
+            Metric("opt", "ceiling", tol=0.10, gated_by="opt_measured"),
+        ]
+    }
+    monkeypatch.setattr("benchmarks.check_regression.SPECS", specs)
+    return specs
+
+
+def _toy(t=1.0, quality=1.0, rss=1.0, parity=0.0, noisy=1.0, opt=1.0,
+         opt_measured=True, calib_s=1.0, **extra):
+    return dict(t=t, quality=quality, rss=rss, parity=parity, noisy=noisy,
+                opt=opt, opt_measured=opt_measured, calib_s=calib_s, **extra)
+
+
+def test_all_equal_is_all_ok(spec_sandbox):
+    st = _one("toy", _toy(), _toy())
+    assert set(st.values()) == {"OK"}
+
+
+def test_time_regression_fails_improvement_warns(spec_sandbox):
+    assert _one("toy", _toy(t=1.2), _toy())[("t", "time")] == "FAIL"
+    assert _one("toy", _toy(t=0.8), _toy())[("t", "time")] == "WARN"
+    # within tolerance either way: OK
+    assert _one("toy", _toy(t=1.05), _toy())[("t", "time")] == "OK"
+
+
+def test_time_is_normalized_by_calib_s(spec_sandbox):
+    # 2x slower wall time on a 2x slower host is NOT a regression...
+    st = _one("toy", _toy(t=2.0, calib_s=2.0), _toy(t=1.0, calib_s=1.0))
+    assert st[("t", "time")] == "OK"
+    # ...but without calib_s in both payloads, raw seconds are compared.
+    st = _one("toy", _toy(t=2.0, calib_s=None), _toy(t=1.0, calib_s=1.0))
+    assert st[("t", "time")] == "FAIL"
+
+
+def test_floor_drop_fails_rise_warns(spec_sandbox):
+    assert _one("toy", _toy(quality=0.8), _toy())[("quality", "floor")] == "FAIL"
+    assert _one("toy", _toy(quality=1.2), _toy())[("quality", "floor")] == "WARN"
+
+
+def test_ceiling_growth_fails_shrink_warns(spec_sandbox):
+    assert _one("toy", _toy(rss=1.2), _toy())[("rss", "ceiling")] == "FAIL"
+    assert _one("toy", _toy(rss=0.8), _toy())[("rss", "ceiling")] == "WARN"
+
+
+def test_bound_is_absolute_and_baseline_independent(spec_sandbox):
+    # The baseline value is irrelevant — only fresh vs the hard bound.
+    base = _toy(parity=1.0)  # terrible baseline must not excuse the fresh run
+    assert _one("toy", _toy(parity=1e-9), base)[("parity", "bound")] == "OK"
+    assert _one("toy", _toy(parity=1e-6), base)[("parity", "bound")] == "FAIL"
+
+
+def test_warn_only_regression_never_fails(spec_sandbox):
+    assert _one("toy", _toy(noisy=0.5), _toy())[("noisy", "floor")] == "WARN"
+
+
+def test_gated_by_false_skips(spec_sandbox):
+    st = _one("toy", _toy(opt=99.0, opt_measured=False), _toy())
+    assert st[("opt", "ceiling")] == "SKIP"
+
+
+def test_missing_fresh_metric_fails_missing_baseline_skips(spec_sandbox):
+    fresh = _toy()
+    del fresh["t"], fresh["parity"]
+    st = _one("toy", fresh, _toy())
+    assert st[("t", "time")] == "FAIL"          # relative kinds
+    assert st[("parity", "bound")] == "FAIL"    # bounds too: absent != passing
+    base = _toy()
+    del base["quality"]
+    assert _one("toy", _toy(), base)[("quality", "floor")] == "SKIP"
+
+
+# -- every committed spec resolves against its committed baseline ----------
+
+
+def test_committed_baselines_satisfy_their_specs():
+    import os
+
+    from benchmarks.check_regression import BASELINE_DIR
+
+    for name, specs in SPECS.items():
+        path = os.path.join(BASELINE_DIR, f"{name}.json")
+        if not os.path.exists(path):
+            continue  # gate not armed yet — CI prints the arming hint
+        with open(path) as f:
+            payload = json.load(f)
+        rows = check_benchmark(name, payload, payload)
+        bad = [(s.path, st, d) for s, st, d in rows if st == "FAIL"]
+        assert not bad, f"{name}: committed baseline fails its own gate: {bad}"
+
+
+def test_fig7_multioutput_gate_is_armed():
+    """PRs 4/6 shipped gates whose baselines were swallowed by the
+    benchmarks/results/* ignore rule — pin that the new baseline is
+    actually tracked and self-consistent."""
+    import os
+    import subprocess
+
+    from benchmarks.check_regression import BASELINE_DIR
+
+    path = os.path.join(BASELINE_DIR, "fig7_multioutput.json")
+    assert os.path.exists(path), "multioutput gate baseline missing"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ignored = subprocess.run(
+        ["git", "check-ignore", "-q", path], cwd=repo).returncode == 0
+    assert not ignored, "baseline is gitignored — the gate would never arm"
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["cost_ratio_multi_vs_independent"] < 0.5
+    assert payload["ll_parity_rel"] <= 1e-8
+    assert payload["predict_parity_rel"] <= 1e-8
+
+
+# -- CLI behavior ----------------------------------------------------------
+
+
+def _write(dirpath, name, payload):
+    p = dirpath / f"{name}.json"
+    p.write_text(json.dumps(payload))
+    return p
+
+
+def test_main_missing_fresh_file_fails(tmp_path, capsys):
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    rc = main(["--fresh", str(fresh), "--baseline", str(tmp_path),
+               "fig7_multioutput"])
+    assert rc == 1
+    assert "missing" in capsys.readouterr().out
+
+
+def test_main_missing_baseline_is_not_a_failure(tmp_path, capsys):
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    _write(fresh, "fig7_multioutput", {
+        "cost_ratio_multi_vs_independent": 0.1,
+        "ll_parity_rel": 1e-12, "predict_parity_rel": 1e-12,
+        "rows": [{"path": "multi", "time_s": 1.0}], "calib_s": 1.0,
+    })
+    base = tmp_path / "base"
+    base.mkdir()
+    rc = main(["--fresh", str(fresh), "--baseline", str(base),
+               "fig7_multioutput"])
+    assert rc == 0
+    assert "commit" in capsys.readouterr().out  # the arming hint
+
+
+def test_main_write_baseline_round_trip(tmp_path, capsys):
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    base = tmp_path / "base"
+    base.mkdir()
+    payload = {
+        "cost_ratio_multi_vs_independent": 0.1,
+        "ll_parity_rel": 1e-12, "predict_parity_rel": 1e-12,
+        "rows": [{"path": "multi", "time_s": 1.0}], "calib_s": 1.0,
+    }
+    _write(fresh, "fig7_multioutput", payload)
+    rc = main(["--fresh", str(fresh), "--baseline", str(base),
+               "--write-baseline", "fig7_multioutput"])
+    assert rc == 0
+    with open(base / "fig7_multioutput.json") as f:
+        assert json.load(f) == payload
+    # The refreshed baseline immediately gates a matching fresh run green.
+    rc = main(["--fresh", str(fresh), "--baseline", str(base),
+               "fig7_multioutput"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "all gates passed" in out
+    # ...and a bound violation in a later fresh run turns it red.
+    bad = dict(payload, ll_parity_rel=1e-3)
+    _write(fresh, "fig7_multioutput", bad)
+    rc = main(["--fresh", str(fresh), "--baseline", str(base),
+               "fig7_multioutput"])
+    assert rc == 1

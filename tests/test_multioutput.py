@@ -1,0 +1,352 @@
+"""Shared-structure multi-output (VPPE) invariants — docs/multioutput.md.
+
+The load-bearing contracts:
+
+* p=1 is BITWISE the single-output path: a ``(n, 1)`` observation matrix
+  squeezes into exactly the code that ran before multi-output existed,
+  for fit and predict both.
+* Batched p-output math equals p independent single-output passes on the
+  SAME structure to relative 1e-8 (observed ~1e-13): the per-output
+  likelihood vector, the profiled sigma2, and the prediction columns.
+* The fused Pallas multi-stats kernel matches the vmapped reference
+  (values and gradients), and bucketed stats match the uniform layout.
+* The streaming multi fit is chunking-invariant, ``MultiOutputParams``
+  survive the checkpoint round-trip, and the server computes all outputs
+  once while per-request masks slice result columns.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.fit import fit_sbv
+from repro.core.multioutput import (
+    MultiOutputParams, as_multi_params, multi_loglik, packed_multi_stats,
+    with_profiled_sigma2,
+)
+from repro.core.pipeline import SBVConfig, preprocess
+from repro.core.predict import predict_sbv
+from repro.core.vecchia import packed_loglik
+from repro.data.store import MemoryStore
+
+pytestmark = pytest.mark.multioutput
+
+REL = 1e-8  # per-output parity is relative: ll magnitudes reach ~1e5
+
+
+@pytest.fixture(scope="module")
+def multi_problem():
+    rng = np.random.default_rng(0)
+    n, d, p = 500, 3, 3
+    x = rng.uniform(size=(n, d))
+    y = np.stack(
+        [np.sin(x @ rng.uniform(1.0, 3.0, size=d))
+         + 0.01 * rng.standard_normal(n) for _ in range(p)],
+        axis=1,
+    )
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return SBVConfig(n_blocks=16, m=20, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fitted(multi_problem, cfg):
+    x, y = multi_problem
+    return fit_sbv(x, y, cfg, inner_steps=4, outer_rounds=1)
+
+
+def _rel(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1.0)))
+
+
+# -- p=1 bitwise identity --------------------------------------------------
+
+
+def test_p1_fit_is_bitwise_single_output(multi_problem, cfg):
+    x, y = multi_problem
+    res1 = fit_sbv(x, y[:, 0], cfg, inner_steps=3, outer_rounds=1)
+    res2 = fit_sbv(x, y[:, :1], cfg, inner_steps=3, outer_rounds=1)
+    for f in ("log_sigma2", "log_beta", "log_nugget"):
+        assert np.array_equal(np.asarray(getattr(res1.params, f)),
+                              np.asarray(getattr(res2.params, f))), f
+    assert np.array_equal(np.asarray(res1.history), np.asarray(res2.history))
+
+
+def test_p1_predict_is_bitwise_single_output(multi_problem, cfg):
+    x, y = multi_problem
+    res = fit_sbv(x, y[:, 0], cfg, inner_steps=3, outer_rounds=1)
+    xq = np.random.default_rng(5).uniform(size=(40, x.shape[1]))
+    p1 = predict_sbv(res.params, x, y[:, 0], xq, bs_pred=8, m_pred=24, seed=0)
+    p2 = predict_sbv(res.params, x, y[:, :1], xq, bs_pred=8, m_pred=24, seed=0)
+    assert p2.mean.shape == (40, 1) and p2.var.shape == (40, 1)
+    for f in ("mean", "var", "sim_mean", "ci_low", "ci_high"):
+        assert np.array_equal(np.asarray(getattr(p1, f)),
+                              np.asarray(getattr(p2, f))[:, 0]), f
+
+
+# -- batched == p independent single-output passes on shared structure ----
+
+
+def test_multi_loglik_matches_per_output_singles(multi_problem, cfg, fitted):
+    x, y = multi_problem
+    params = fitted.params
+    packed_m, _ = preprocess(x, y, params.beta, cfg)
+    ll_multi = np.asarray(multi_loglik(params, packed_m))
+    ll_single = np.array([
+        float(packed_loglik(params.output_params(j),
+                            preprocess(x, y[:, j], params.beta, cfg)[0]))
+        for j in range(y.shape[1])
+    ])
+    assert _rel(ll_multi, ll_single) <= REL
+
+
+def test_multi_stats_match_stacked_single_output_packs(multi_problem, cfg,
+                                                       fitted):
+    x, y = multi_problem
+    params = fitted.params
+    packed_m, _ = preprocess(x, y, params.beta, cfg)
+    ld_m, q_m = packed_multi_stats(params, packed_m)
+    for j in range(y.shape[1]):
+        packed_j, _ = preprocess(x, y[:, j : j + 1], params.beta, cfg)
+        ld_j, q_j = packed_multi_stats(params, packed_j)
+        assert abs(float(ld_j) - float(ld_m)) <= REL * abs(float(ld_m))
+        assert _rel(q_j[0], q_m[j]) <= REL
+
+
+def test_profiled_sigma2_matches_per_output_profile(multi_problem, cfg,
+                                                    fitted):
+    x, y = multi_problem
+    params = fitted.params
+    packed_m, _ = preprocess(x, y, params.beta, cfg)
+    prof = with_profiled_sigma2(params, packed_m)
+    for j in range(y.shape[1]):
+        packed_j, _ = preprocess(x, y[:, j : j + 1], params.beta, cfg)
+        _, q_j = packed_multi_stats(params, packed_j)
+        s2_j = float(q_j[0]) / packed_j.n_points
+        assert abs(float(prof.sigma2[j]) - s2_j) <= REL * abs(s2_j)
+
+
+def test_multi_predict_matches_per_output_singles(multi_problem, cfg, fitted):
+    x, y = multi_problem
+    params = fitted.params
+    xq = np.random.default_rng(7).uniform(size=(50, x.shape[1]))
+    pm = predict_sbv(params, x, y, xq, bs_pred=8, m_pred=24, seed=0, n_sims=2)
+    assert pm.mean.shape == (50, y.shape[1])
+    for j in range(y.shape[1]):
+        pj = predict_sbv(params.output_params(j), x, y[:, j], xq,
+                         bs_pred=8, m_pred=24, seed=0, n_sims=2)
+        assert _rel(pm.mean[:, j], pj.mean) <= REL
+        assert _rel(pm.var[:, j], pj.var) <= REL
+    assert np.all(np.asarray(pm.var) > 0)
+
+
+# -- kernels: fused Pallas multi-stats == vmapped reference ----------------
+
+
+def test_pallas_multi_stats_matches_ref(multi_problem, cfg, fitted):
+    x, y = multi_problem
+    params = fitted.params
+    packed_m, _ = preprocess(x, y, params.beta, cfg)
+    ld_r, q_r = packed_multi_stats(params, packed_m, backend="ref")
+    ld_p, q_p = packed_multi_stats(params, packed_m, backend="pallas")
+    assert abs(float(ld_p) - float(ld_r)) <= 1e-8 * max(abs(float(ld_r)), 1.0)
+    assert _rel(q_p, q_r) <= REL
+
+
+def test_pallas_multi_stats_gradients_match_ref(multi_problem, cfg, fitted):
+    x, y = multi_problem
+    params = fitted.params
+    packed_m, _ = preprocess(x, y, params.beta, cfg)
+
+    def loss(pp, backend):
+        ld, q = packed_multi_stats(pp, packed_m, backend=backend)
+        return ld + jnp.sum(jnp.log(q))
+
+    g_r = jax.grad(lambda pp: loss(pp, "ref"))(params)
+    g_p = jax.grad(lambda pp: loss(pp, "pallas"))(params)
+    for f in ("log_sigma2", "log_beta", "log_tau2"):
+        assert np.allclose(np.asarray(getattr(g_p, f)),
+                           np.asarray(getattr(g_r, f)),
+                           rtol=1e-8, atol=1e-10), f
+    # The pooled objective never touches log_sigma2 (it is profiled out):
+    # its gradient through the stats must be exactly zero.
+    g_pool = jax.grad(
+        lambda pp: packed_multi_stats(pp, packed_m)[0]
+        + jnp.sum(packed_multi_stats(pp, packed_m)[1])
+    )(params)
+    assert np.all(np.asarray(g_pool.log_sigma2) == 0.0)
+
+
+def test_bucketed_multi_stats_match_uniform(multi_problem, cfg, fitted):
+    from repro.core.buckets import bucket_blocks
+
+    x, y = multi_problem
+    params = fitted.params
+    packed_m, _ = preprocess(x, y, params.beta, cfg)
+    ld_u, q_u = packed_multi_stats(params, packed_m)
+    ld_b, q_b = packed_multi_stats(params, bucket_blocks(packed_m, n_buckets=3))
+    assert abs(float(ld_b) - float(ld_u)) <= 1e-10 * max(abs(float(ld_u)), 1.0)
+    assert _rel(q_b, q_u) <= 1e-10
+
+
+# -- streaming fit ---------------------------------------------------------
+
+
+def test_streaming_multi_fit_chunking_invariant(multi_problem, cfg):
+    x, y = multi_problem
+    res_a = fit_sbv(x, y, cfg, inner_steps=3, outer_rounds=1,
+                    stream_chunk=120)
+    res_b = fit_sbv(x, y, cfg, inner_steps=3, outer_rounds=1,
+                    stream_chunk=5000)
+    for f in ("log_sigma2", "log_beta", "log_tau2"):
+        assert np.allclose(np.asarray(getattr(res_a.params, f)),
+                           np.asarray(getattr(res_b.params, f)),
+                           rtol=0, atol=1e-10), f
+    assert res_a.stream_stats["n_outputs"] == y.shape[1]
+
+
+def test_store_backed_multi_fit_routes_to_streaming(multi_problem, cfg):
+    x, y = multi_problem
+    store = MemoryStore(x, y)
+    res_st = fit_sbv(store, None, cfg, inner_steps=3, outer_rounds=1,
+                     stream_chunk=120)
+    res_in = fit_sbv(x, y, cfg, inner_steps=3, outer_rounds=1,
+                     stream_chunk=120)
+    for f in ("log_sigma2", "log_beta", "log_tau2"):
+        assert np.array_equal(np.asarray(getattr(res_st.params, f)),
+                              np.asarray(getattr(res_in.params, f))), f
+
+
+def test_multi_fit_rejects_unsupported_paths(multi_problem, cfg):
+    x, y = multi_problem
+    with pytest.raises(NotImplementedError):
+        fit_sbv(x, y, cfg, precision="f32")
+    with pytest.raises(NotImplementedError):
+        fit_sbv(x, y, cfg, distributed=(None, "workers"))
+    with pytest.raises(NotImplementedError):
+        fit_sbv(x, y, cfg, stream_chunk=120, n_buckets=2)
+
+
+# -- parameter container + checkpoint round-trip ---------------------------
+
+
+def test_as_multi_params_roundtrip():
+    from repro.core.kernels_math import KernelParams
+
+    kp = KernelParams.create(sigma2=2.0, beta=np.array([1.0, 2.0]),
+                             nugget=1e-3)
+    mp = as_multi_params(kp, p=4, d=2)
+    assert mp.n_outputs == 4
+    assert np.allclose(np.asarray(mp.sigma2), 2.0)
+    assert np.allclose(np.asarray(mp.tau2), 1e-3 / 2.0)
+    back = mp.output_params(2)
+    for f in ("log_sigma2", "log_beta", "log_nugget"):
+        assert np.allclose(np.asarray(getattr(back, f)),
+                           np.asarray(getattr(kp, f))), f
+    assert as_multi_params(mp, p=4, d=2) is mp
+
+
+def test_multi_params_checkpoint_roundtrip(tmp_path, fitted):
+    from repro.ckpt.checkpoint import restore_train_state, save_checkpoint
+
+    params = fitted.params
+    path = save_checkpoint(str(tmp_path), 0, {"params": params})
+    state, _ = restore_train_state(path, {"params": params})
+    restored = state["params"]
+    assert isinstance(restored, MultiOutputParams)
+    for f in ("log_sigma2", "log_beta", "log_tau2"):
+        assert np.array_equal(np.asarray(getattr(restored, f)),
+                              np.asarray(getattr(params, f))), f
+
+
+# -- serving: output masks -------------------------------------------------
+
+
+def test_server_multi_output_and_masks(multi_problem, cfg, fitted):
+    from repro.serving import GPServer, GPServerConfig, PipelineConfig
+    from repro.serving.batching import SchedulerPolicy
+
+    x, y = multi_problem
+    params = fitted.params
+    p = y.shape[1]
+    xq = np.random.default_rng(11).uniform(size=(45, x.shape[1]))
+    ref = predict_sbv(params, x, y, xq, bs_pred=8, m_pred=24, seed=0)
+
+    pipe = PipelineConfig(bs_pred=8, m_pred=24, chunk_size=None)
+    # Drain mode: the first batch reproduces predict_sbv; a masked
+    # request's result is exactly the requested columns.
+    with GPServer(params, x, y, GPServerConfig(pipeline=pipe)) as srv:
+        assert srv.n_outputs == p
+        fut = srv.submit(xq, outputs=[p - 1, 0])
+        srv.flush()
+        res = fut.result()
+    assert res.mean.shape == (45, 2)
+    np.testing.assert_array_equal(res.mean, ref.mean[:, [p - 1, 0]])
+    np.testing.assert_array_equal(res.var, ref.var[:, [p - 1, 0]])
+
+    # Scheduler mode: same contract through the continuous-batching path,
+    # and a full-mask request collapses to the unmasked result.
+    with GPServer(params, x, y,
+                  GPServerConfig(pipeline=pipe,
+                                 scheduler=SchedulerPolicy())) as srv:
+        fut = srv.submit(xq, outputs=[1])
+        srv.flush()
+        r1 = fut.result()
+        fut = srv.submit(xq, outputs=list(range(p)))
+        srv.flush()
+        r2 = fut.result()
+    np.testing.assert_array_equal(r1.mean, ref.mean[:, [1]])
+    assert r2.mean.shape == (45, p)
+
+    with GPServer(params, x, y, GPServerConfig(pipeline=pipe)) as srv:
+        with pytest.raises(ValueError):
+            srv.submit(xq, outputs=[p])
+        with pytest.raises(ValueError):
+            srv.submit(xq, outputs=[])
+
+
+def test_spool_sink_multi_output_roundtrip(multi_problem, cfg, fitted):
+    from repro.serving import GPServer, GPServerConfig, PipelineConfig
+    from repro.serving.batching import SchedulerPolicy
+
+    x, y = multi_problem
+    params = fitted.params
+    xq = np.random.default_rng(13).uniform(size=(40, x.shape[1]))
+    ref = predict_sbv(params, x, y, xq, bs_pred=8, m_pred=24, seed=0)
+    pipe = PipelineConfig(bs_pred=8, m_pred=24, chunk_size=None)
+    with GPServer(params, x, y,
+                  GPServerConfig(pipeline=pipe,
+                                 scheduler=SchedulerPolicy(
+                                     spool_threshold=1))) as srv:
+        fut = srv.submit(xq)
+        srv.flush()
+        res = fut.result()
+    assert res.mean is None and res.sink is not None
+    mean, var = res.sink.materialize()
+    np.testing.assert_array_equal(mean, ref.mean)
+    np.testing.assert_array_equal(var, ref.var)
+    res.sink.cleanup()
+
+
+# -- dataset generator -----------------------------------------------------
+
+
+def test_metarvm_field_dataset_shapes_and_endpoint():
+    from repro.data.gp_sim import (metarvm_dataset, metarvm_field_dataset,
+                                   metarvm_field_simulate,
+                                   metarvm_sample_inputs)
+
+    x, y = metarvm_field_dataset(0, 64, p=5)
+    assert x.shape == (64, 10) and y.shape == (64, 5)
+    assert np.allclose(y.mean(axis=0), 1.0)  # per-output normalization
+    # The last snapshot is exactly the single-output simulator endpoint.
+    theta = metarvm_sample_inputs(0, 64)
+    field = metarvm_field_simulate(theta, p=5)
+    x1, y1 = metarvm_dataset(0, 64, normalize=False)
+    assert np.array_equal(field[:, -1], y1)
+    # Cumulative admissions are monotone across snapshots.
+    assert np.all(np.diff(field, axis=1) >= 0)
