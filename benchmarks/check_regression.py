@@ -78,6 +78,21 @@ SPECS: dict[str, list[Metric]] = {
         Metric("soak.bulk_points_ratio", "floor", tol=0.10),
         Metric("soak.continuous.interactive_p99_s", "time", tol=0.30,
                warn_only=True),
+        # Router phase (multi-replica shape-affinity routing): ratio and
+        # parity gates only, like the soak — both sides of each ratio
+        # come from the same run. recompile_ratio is per-replica compile
+        # keys touched under affinity vs random routing (the benchmark
+        # asserts <= 0.5; the bound re-checks it) and parity is the
+        # routing-never-changes-a-result contract. The 3-vs-1-replica
+        # throughput floor only means something where thread replicas
+        # can actually run in parallel, so it is gated on the fresh
+        # run's core count (the benchmark itself asserts the hard 1.5x
+        # there).
+        Metric("router.recompile_ratio", "bound", bound=0.5),
+        Metric("router.parity_max", "bound", bound=1e-12),
+        Metric("router.affinity_hit_rate", "floor", tol=0.01),
+        Metric("router.qps_ratio_3v1", "floor", tol=0.15,
+               gated_by="router_multi_core"),
     ],
     "fig_streaming_scale": [
         Metric("t_fit_s", "time", tol=0.10),

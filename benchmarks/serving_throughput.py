@@ -251,6 +251,110 @@ def main():
           f"(must be < 1), bulk goodput ratio = {bulk_ratio:.3f} "
           f"(must be >= 0.9), parity(sampled) = {parity_max:.1e}")
 
+    # ---- router: multi-replica shape-affinity routing -----------------
+    # A stream of 9 distinct request size classes (128..1152 points),
+    # each class replayed per_class times — REPEAT traffic, the workload
+    # affinity routing exists for. (A request's compile key includes the
+    # realized max k-means cluster size, which is data-dependent, so the
+    # key is deterministic per payload, not per point count: replaying
+    # the class payload is what makes its key re-usable at all.) Three
+    # configurations over the SAME shuffled stream and one shared train
+    # index: 1 replica, 3 replicas with rendezvous shape affinity, 3
+    # replicas with seeded-random spray. Affinity must (a) never change
+    # a result (per-request parity vs lone predict_sbv <= 1e-12),
+    # (b) touch at most half the per-replica compile keys random routing
+    # touches, and (c) on a >= 3-core host, carry >= 1.5x the
+    # single-replica throughput (thread replicas on a 1-core host cannot
+    # speed anything up, so there the gate is a sanity floor; the ratio
+    # is recorded either way).
+    import os
+
+    from repro.serving import ReplicaRouter
+
+    r_bs, r_m = 16, m
+    r_chunk = 2048 if args.scale == "smoke" else 4096
+    per_class = 6 if args.scale == "smoke" else 8
+    sizes = [(k + 1) * 128 for k in range(9)]
+    req_rng = np.random.default_rng(args.seed + 3)
+    class_payloads = [req_rng.uniform(size=(s, x.shape[1])) for s in sizes]
+    stream = [xq for xq in class_payloads for _ in range(per_class)]
+    stream = [stream[i] for i in req_rng.permutation(len(stream))]
+    total_pts = sum(s.shape[0] for s in stream)
+
+    router_cfg = GPServerConfig(
+        pipeline=PipelineConfig(bs_pred=r_bs, m_pred=r_m,
+                                chunk_size=r_chunk, backend=backend),
+        policy=BatchingPolicy(max_points=r_chunk, max_wait_s=0.002),
+        scheduler=SchedulerPolicy(), seed=args.seed,
+    )
+
+    def run_router(n_replicas, routing):
+        reps = [GPServer(params, x, y, router_cfg, index=server.index)
+                for _ in range(n_replicas)]
+        router = ReplicaRouter(reps, routing=routing, seed=args.seed)
+        with router:
+            t0 = time.time()
+            futs = [router.submit(xq) for xq in stream]
+            outs = [f.result(timeout=1200) for f in futs]
+            dt = time.time() - t0
+        shapes = [len(r.stats.compiled_shape_keys()) for r in reps]
+        return dt, outs, shapes, router.stats.summary()
+
+    run_router(1, "affinity")  # compile all 9 keys off the clock
+    t_r1, outs_r1, shapes_r1, _ = run_router(1, "affinity")
+    t_aff, outs_aff, shapes_aff, rsum_aff = run_router(3, "affinity")
+    t_rand, outs_rand, shapes_rand, _ = run_router(3, "random")
+
+    qps_router = {"1": total_pts / t_r1, "3_affinity": total_pts / t_aff,
+                  "3_random": total_pts / t_rand}
+    qps_ratio_3v1 = qps_router["3_affinity"] / qps_router["1"]
+    # Per-replica compile keys touched: affinity pins each size class to
+    # one replica (mean = 9/3 = 3); random spray cold-starts most
+    # classes on most replicas.
+    recompile_ratio = float(np.mean(shapes_aff) / np.mean(shapes_rand))
+
+    parity_router = 0.0
+    for idx in (0, len(stream) // 2, len(stream) - 1):
+        ref_r = predict_sbv(params, x, y, stream[idx], bs_pred=r_bs,
+                            m_pred=r_m, seed=args.seed, n_sims=2,
+                            chunk_size=r_chunk, backend=backend)
+        for outs in (outs_r1, outs_aff, outs_rand):
+            parity_router = max(
+                parity_router,
+                float(abs(outs[idx].mean - np.asarray(ref_r.mean)).max()),
+                float(abs(outs[idx].var - np.asarray(ref_r.var)).max()))
+
+    cores = len(os.sched_getaffinity(0))
+    router_rows = [
+        {"config": "1", "time_s": t_r1, "qps": qps_router["1"],
+         "shapes": sum(shapes_r1)},
+        {"config": "3_affinity", "time_s": t_aff,
+         "qps": qps_router["3_affinity"], "shapes": sum(shapes_aff)},
+        {"config": "3_random", "time_s": t_rand,
+         "qps": qps_router["3_random"], "shapes": sum(shapes_rand)},
+    ]
+    table(router_rows, ["config", "time_s", "qps", "shapes"],
+          title=f"router: {len(stream)} requests, 9 size classes "
+                f"(128..1152 pts), chunk={r_chunk}, {cores} cores")
+    print(f"\nrouter: qps 3-replica-affinity / 1-replica = "
+          f"{qps_ratio_3v1:.2f}x ({cores} cores), per-replica compile "
+          f"keys affinity/random = {recompile_ratio:.2f} (must be <= 0.5), "
+          f"affinity-hit={rsum_aff['affinity_hit_rate']:.2f}, "
+          f"parity(sampled) = {parity_router:.1e}")
+    assert recompile_ratio <= 0.5, (
+        f"affinity stopped concentrating compile keys: {recompile_ratio:.3f}")
+    assert rsum_aff["affinity_hit_rate"] >= 0.99, rsum_aff
+    assert parity_router <= 1e-12, (
+        f"routing changed a result: {parity_router:.3e}")
+    if cores >= 3:
+        assert qps_ratio_3v1 >= 1.5, (
+            f"3 replicas on {cores} cores must beat 1.5x one replica: "
+            f"{qps_ratio_3v1:.2f}x")
+    else:
+        assert qps_ratio_3v1 >= 0.5, (
+            f"router overhead ate >2x on a {cores}-core host: "
+            f"{qps_ratio_3v1:.2f}x")
+
     from benchmarks.common import calibrate
 
     save("serving_throughput", {
@@ -258,7 +362,8 @@ def main():
         "backend": backend, "bucketed": args.bucketed,
         "n_train": n_train, "n_test": n_test, "chunk": chunk,
         "bs_pred": bs, "m_pred": m, "n_requests": n_req,
-        "t_index_s": t_index, "rows": rows, "speedup_double_vs_sync": speedup,
+        "t_index_s": t_index, "router_multi_core": cores >= 3,
+        "rows": rows, "speedup_double_vs_sync": speedup,
         "parity_double_vs_sync": float(d_sync),
         "parity_vs_predict_sbv": float(d_ref),
         "server_stats": stats,
@@ -270,6 +375,17 @@ def main():
             "interactive_p99_ratio": p99_ratio,
             "bulk_points_ratio": bulk_ratio,
             "parity_max": parity_max,
+        },
+        "router": {
+            "chunk": r_chunk, "bs_pred": r_bs, "m_pred": r_m,
+            "n_requests": len(stream), "total_points": total_pts,
+            "cores": cores, "multi_core": cores >= 3,
+            "rows": router_rows,
+            "qps_ratio_3v1": qps_ratio_3v1,
+            "shapes_affinity": shapes_aff, "shapes_random": shapes_rand,
+            "recompile_ratio": recompile_ratio,
+            "affinity_hit_rate": rsum_aff["affinity_hit_rate"],
+            "parity_max": parity_router,
         },
     })
 

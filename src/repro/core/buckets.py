@@ -280,6 +280,15 @@ def acc_dtype(tier: str):
     return {"bf16": np.float32, "f32": np.float32, "f64": np.float64}[tier]
 
 
+def dtype_tier(dt) -> str:
+    """Inverse of ``storage_dtype``: the ladder tier a packed piece runs
+    at, read off its coordinate dtype (telemetry tags compile-cache keys
+    with this — same shape at two dtypes is two compiled programs)."""
+    name = np.dtype(dt).name
+    return {"float64": "f64", "float32": "f32", "bfloat16": "bf16"}.get(name,
+                                                                        name)
+
+
 @dataclass(frozen=True)
 class PrecisionPolicy:
     """Per-bucket precision selection for the likelihood/prediction ladder.

@@ -139,7 +139,7 @@ def _chunk_grad_fn(nu: float, backend: str, n_points: int, mesh=None,
 
 def _fit_sbv_multi(
     x, y, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
-    n_buckets,
+    n_buckets, precision=None,
 ):
     """Monolithic multi-output fit (docs/multioutput.md).
 
@@ -147,7 +147,15 @@ def _fit_sbv_multi(
     minimizes the pooled profile likelihood over (log_beta, log_tau2)
     through the shared-Cholesky stats; per-output sigma2 are profiled in
     closed form at the end (their gradient in the pooled objective is
-    identically zero, so they simply ride along in the pytree)."""
+    identically zero, so they simply ride along in the pytree).
+
+    ``precision`` applies the ladder tier CAST-ONLY (docs/precision.md):
+    ``cast_packed`` narrows coordinates to the tier's storage dtype and
+    the (bc, bs, p) observation columns to its accumulation dtype — the
+    multi-RHS layout rides the same dtype fields, and the stats kernels
+    already cast params to the data's accumulation dtype. The per-bucket
+    nll probe is single-output-only, so ``probe`` is ignored here;
+    budget enforcement is the tier's documented bound."""
     from .multioutput import (
         as_multi_params, MultiOutputParams, multi_profile_neg_loglik_fn,
         with_profiled_sigma2,
@@ -164,6 +172,13 @@ def _fit_sbv_multi(
         params = as_multi_params(init, p, d)
     history = []
     packed = None
+    tier = None
+    if precision is not None:
+        from .buckets import as_policy
+
+        pol = as_policy(precision)
+        if pol.tier != "f64":
+            tier = pol.tier
 
     for outer in range(outer_rounds):
         beta_np = np.asarray(params.beta)
@@ -172,6 +187,12 @@ def _fit_sbv_multi(
             from .buckets import bucket_blocks
 
             packed = bucket_blocks(packed, n_buckets=n_buckets)
+        if tier:
+            from .buckets import apply_precision, BucketedBlocks, cast_packed
+
+            packed = (apply_precision(packed, tier)
+                      if isinstance(packed, BucketedBlocks)
+                      else cast_packed(packed, tier))
         grad_fn = jax.jit(jax.value_and_grad(
             multi_profile_neg_loglik_fn(packed, nu, backend)))
 
@@ -238,11 +259,15 @@ def _multi_wgrad_chunk_fn(nu: float, backend: str, n_points: int, p: int):
 def _fit_sbv_multi_streaming(
     store, cfg, init, nu, lr, inner_steps, outer_rounds, backend, verbose,
     stream_chunk, spool_dir, device_cache=None, prefetch: int = 2,
+    precision=None,
 ):
     """Out-of-core multi-output fit: ``_fit_sbv_streaming``'s spool plan
     with the two-pass chunk accumulation of ``_multi_wgrad_chunk_fn``.
     Every pass holds ~stream_chunk data rows; blk_y/nn_y spool with their
-    (…, p) output axis through the same npz tiers."""
+    (…, p) output axis through the same npz tiers. ``precision`` is
+    UNIFORM cast-only like the single-output streaming fit: every chunk
+    is ``cast_packed`` to the tier before spooling (no per-piece probe),
+    so the spool and H2D stage carry the narrow layout."""
     import shutil
     import tempfile
 
@@ -266,10 +291,18 @@ def _fit_sbv_multi_streaming(
                                           d=d, p=p)
     else:
         params = as_multi_params(init, p, d)
+    tier = None
+    if precision is not None:
+        from .buckets import as_policy
+
+        pol = as_policy(precision)
+        if pol.tier != "f64":
+            tier = pol.tier
     history = []
     stats = {"n_chunks": 0, "n_pieces": 0, "packed_chunk_bytes_max": 0,
              "spool_bytes": 0, "bs_max": 0, "bc": 0, "n_shards": 1,
-             "n_outputs": p, "inner_steps_total": 0, "inner_time_s": 0.0}
+             "n_outputs": p, "inner_steps_total": 0, "inner_time_s": 0.0,
+             "precision": tier or "f64"}
     final_q = None
 
     for outer in range(outer_rounds):
@@ -292,6 +325,10 @@ def _fit_sbv_multi_streaming(
                     store, struct.blocks, struct.neigh, ranks,
                     m=cfg.m, bs_max=struct.bs_max, dtype=cfg.dtype,
                 )
+                if tier:
+                    from .buckets import cast_packed
+
+                    packed = cast_packed(packed, tier)
                 spool.add(packed.pad_to_blocks(bc_pad),
                           tag=_piece_backend(backend, packed))
             stats.update(
@@ -804,10 +841,6 @@ def fit_sbv(
         if multihost is not None or distributed is not None:
             raise NotImplementedError("multi-output fits do not support "
                                       "multihost=/distributed= yet")
-        if precision is not None:
-            raise NotImplementedError("multi-output fits run at the packed "
-                                      "dtype; the precision ladder is not "
-                                      "wired in yet")
         if stream_chunk is not None:
             if n_buckets:
                 raise NotImplementedError("bucketed piece shapes are not "
@@ -817,17 +850,15 @@ def fit_sbv(
                 as_store(x, y2), cfg, init, nu, lr, inner_steps, outer_rounds,
                 backend, verbose, stream_chunk, spool_dir,
                 device_cache=device_cache, prefetch=prefetch,
+                precision=precision,
             )
         return _fit_sbv_multi(x, y2, cfg, init, nu, lr, inner_steps,
-                              outer_rounds, backend, verbose, n_buckets)
+                              outer_rounds, backend, verbose, n_buckets,
+                              precision=precision)
     if is_store(x) and np.asarray(as_store(x, y).read_slice(0, 1)[1]).ndim == 2:
         if multihost is not None or distributed is not None:
             raise NotImplementedError("multi-output fits do not support "
                                       "multihost=/distributed= yet")
-        if precision is not None:
-            raise NotImplementedError("multi-output fits run at the packed "
-                                      "dtype; the precision ladder is not "
-                                      "wired in yet")
         if n_buckets:
             raise NotImplementedError("bucketed piece shapes are not wired "
                                       "into the multi-output streaming fit "
@@ -837,7 +868,7 @@ def fit_sbv(
         return _fit_sbv_multi_streaming(
             as_store(x, y), cfg, init, nu, lr, inner_steps, outer_rounds,
             backend, verbose, stream_chunk or DEFAULT_STRUCT_BATCH, spool_dir,
-            device_cache=device_cache, prefetch=prefetch,
+            device_cache=device_cache, prefetch=prefetch, precision=precision,
         )
 
     if is_store(x) or stream_chunk is not None:

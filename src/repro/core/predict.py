@@ -331,6 +331,44 @@ def _predict_and_simulate(
     return mu, var, sim_mean, sim_std
 
 
+@partial(jax.jit, static_argnames=("nu", "backend", "n_sims", "lo", "bc_full"))
+def _predict_and_simulate_span(
+    params, q_x, q_mask, nn_x, nn_y, nn_mask, key,
+    nu: float, backend: str, n_sims: int, lo: int, bc_full: int,
+):
+    """One rank's block span of a chunk, with the FULL chunk's sim-draw
+    stream: eps is generated at the whole-chunk ``(n_sims, bc_full, ...)``
+    shape from the chunk's key and sliced to this rank's ``[lo, lo+bc)``
+    block rows, so every block receives exactly the draws the serial
+    ``_predict_and_simulate`` would hand it. Per-block conditionals are
+    independent, so mean/var shard bitwise; the simulation columns agree
+    to ~1 ulp (XLA fuses the eps slice into the sample reductions
+    differently per span shape) — far inside the 1e-8 multi-host parity
+    gate. A full-span slice (``lo=0, bc_full=bc``) is bitwise
+    everywhere, which is the LoopbackComm contract."""
+    mu, var = batched_block_predict(
+        params, q_x, q_mask, nn_x, nn_y, nn_mask, nu=nu, backend=backend
+    )
+    eps = jax.random.normal(key, (n_sims, bc_full) + mu.shape[1:],
+                            dtype=mu.dtype)[:, lo:lo + mu.shape[0]]
+    draws = mu[None] + jnp.sqrt(var)[None] * eps
+    sim_mean = jnp.mean(draws, axis=0)
+    sim_std = jnp.std(draws, axis=0, ddof=1)
+    return mu, var, sim_mean, sim_std
+
+
+def _slice_prediction_blocks(p: PackedPrediction, lo: int,
+                             hi: int) -> PackedPrediction:
+    """A contiguous block-row view of a packed chunk (every field's
+    leading axis is the block count; ``q_idx`` stays global, so the
+    scatter of a slice lands in the right test rows)."""
+    return PackedPrediction(
+        q_x=p.q_x[lo:hi], q_mask=p.q_mask[lo:hi], q_idx=p.q_idx[lo:hi],
+        nn_x=p.nn_x[lo:hi], nn_y=p.nn_y[lo:hi], nn_mask=p.nn_mask[lo:hi],
+        owners=p.owners[lo:hi],
+    )
+
+
 def predict_sbv(
     params: KernelParams,
     x_train: np.ndarray,
@@ -351,6 +389,7 @@ def predict_sbv(
     stream_chunk: int | None = None,
     precision=None,
     tuning=None,
+    multihost=None,
 ) -> Prediction:
     """Packed block prediction over the full test set.
 
@@ -375,7 +414,18 @@ def predict_sbv(
     there is no per-chunk probe — budget enforcement happens at fit/tune
     time (``assign_precision`` / the autotuner); pass the fitted tier.
     ``tuning`` (TuningRecord / dict / checkpoint path) fills n_buckets,
-    stream_chunk, and precision when unset, and backend when 'auto'."""
+    stream_chunk, and precision when unset, and backend when 'auto'.
+
+    ``multihost`` (a ``MultihostContext`` / ``LoopbackComm``,
+    repro/multihost.py) shards every chunk's prediction BLOCKS by owner
+    rank: each rank computes its contiguous block span with the full
+    chunk's simulation-draw stream (``_predict_and_simulate_span``),
+    scatters into zero-filled result columns, and ONE allreduce-sum per
+    call merges the disjoint columns (x + 0 is exact in any order, so
+    the sum IS an allgather). Every rank must pass identical training
+    and test data; all ranks return the full result — mean/var bitwise
+    equal to the serial call, simulation columns to ~1 ulp (<= 1e-8
+    gated). A ``LoopbackComm`` reproduces the serial call bitwise."""
     from repro.data.store import is_store
 
     if tuning is not None:
@@ -470,13 +520,38 @@ def predict_sbv(
         for bi, piece in enumerate(pieces):
             # Uniform path keeps the pre-bucketing key stream (bit-stable
             # sim draws); buckets get independent per-bucket streams.
-            mu_b, var_b, sm_b, ss_b = _predict_and_simulate(
-                params, *(jnp.asarray(a) for a in piece.arrays()),
-                key_c if not n_buckets else jax.random.fold_in(key_c, bi),
-                nu=nu, backend=backend, n_sims=n_sims,
-            )
-            scatter_packed(piece, (mu_b, mean), (var_b, var),
-                           (sm_b, sim_mean), (ss_b, sim_std))
+            key_b = key_c if not n_buckets else jax.random.fold_in(key_c, bi)
+            if multihost is None:
+                mu_b, var_b, sm_b, ss_b = _predict_and_simulate(
+                    params, *(jnp.asarray(a) for a in piece.arrays()),
+                    key_b, nu=nu, backend=backend, n_sims=n_sims,
+                )
+                scatter_packed(piece, (mu_b, mean), (var_b, var),
+                               (sm_b, sim_mean), (ss_b, sim_std))
+                continue
+            # Multi-host: this rank computes only its contiguous block
+            # span; the full-chunk eps stream is sliced inside the jit so
+            # the draws match the serial path bitwise.
+            from repro.multihost import partition_blocks
+
+            bc_full = piece.n_blocks
+            lo, hi = partition_blocks(bc_full, multihost.size)[multihost.rank]
+            if hi > lo:
+                sub = _slice_prediction_blocks(piece, lo, hi)
+                mu_b, var_b, sm_b, ss_b = _predict_and_simulate_span(
+                    params, *(jnp.asarray(a) for a in sub.arrays()),
+                    key_b, nu=nu, backend=backend, n_sims=n_sims,
+                    lo=lo, bc_full=bc_full,
+                )
+                scatter_packed(sub, (mu_b, mean), (var_b, var),
+                               (sm_b, sim_mean), (ss_b, sim_std))
+
+    if multihost is not None:
+        # Ranks filled disjoint result rows (block spans own disjoint
+        # query indices); one allreduce-sum of the zero-initialized
+        # columns is an exact allgather — x + 0 in any reduction order.
+        merged = multihost.allreduce(np.stack([mean, var, sim_mean, sim_std]))
+        mean, var, sim_mean, sim_std = (merged[i] for i in range(4))
 
     if squeeze_back:
         # (n, 1) input: single-output math, multi-output result shape.

@@ -16,6 +16,15 @@ computes chunk k).
         --n-test 100000 --chunk 4096 --bs-pred 25 --m-pred 120 \
         --backend pallas_tiled --dtype f32 --workers 4 --requests 64
 
+``--replicas N`` fronts N scheduler-mode server replicas with the
+compile-cache-affinity router (docs/serving.md "Multi-replica routing");
+``--distributed-hosts K`` re-launches this driver as K rank processes
+over ``jax.distributed``: each rank serves its rendezvous-owned slice of
+the request stream through a local router, then the ranks collectively
+run the multi-host ``predict_sbv(multihost=)`` parity probe. Heavy jax
+imports stay inside ``main``'s LM branch so rank processes can connect
+before the JAX backend initializes.
+
 ``--compare`` additionally races the synchronous chunk loop against the
 double-buffered pipeline on the same workload and cross-checks parity.
 """
@@ -24,29 +33,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs import get_config
-from repro.models.model import init_params, prefill_step, serve_step
-from repro.sharding.compat import set_mesh
-from repro.sharding.rules import cache_specs, param_specs, tp_size
-from repro.launch.train import make_mesh
 
 
-def serve_gp(argv=None):
-    """Persistent micro-batching SBV prediction service.
-
-    The test set is split into ``--requests`` asynchronous requests that
-    are submitted concurrently; the server coalesces them into padded
-    micro-batches and runs each through the double-buffered chunk
-    pipeline. ``--workers k`` shards every chunk's prediction blocks over
-    a k-device mesh (``distributed_predict``); the scatter stays
-    host-side. ``--pipeline sync`` falls back to the strictly serial
-    chunk loop (the pre-server behavior), and ``--compare`` races both
-    on the same workload."""
+def _gp_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser("serve gp")
     ap.add_argument("--dataset", default="synthetic",
                     choices=["synthetic", "satdrag", "metarvm"])
@@ -114,6 +104,28 @@ def serve_gp(argv=None):
                     help="requests at least this large stream results to a "
                          "disk spool sink instead of RAM "
                          "(--scheduler continuous)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="front N server replicas (threads sharing one "
+                         "training index) with the shape-affinity router "
+                         "(docs/serving.md); implies --scheduler continuous")
+    ap.add_argument("--routing", default="affinity",
+                    choices=["affinity", "random", "round_robin"],
+                    help="replica routing policy (--replicas > 1): affinity "
+                         "= rendezvous-hashed compile-shape signature with "
+                         "least-outstanding-work spill")
+    ap.add_argument("--spill-points", type=int, default=None, metavar="PTS",
+                    help="spill an affinity-routed request to the least "
+                         "loaded replica when its preferred replica has "
+                         "more than this many outstanding points")
+    ap.add_argument("--distributed-hosts", type=int, default=0, metavar="K",
+                    help="spawn K rank processes over jax.distributed: each "
+                         "serves its rendezvous-owned request slice through "
+                         "a local router, then all ranks run the multi-host "
+                         "predict_sbv(multihost=) parity probe "
+                         "(synthetic dataset only)")
+    ap.add_argument("--result-json", default=None, metavar="PATH",
+                    help="write the serve summary as JSON (rank processes "
+                         "write PATH.rank<r>; the parent merges them)")
     ap.add_argument("--compare", action="store_true",
                     help="race sync vs double-buffered on the same workload "
                          "and cross-check parity against predict_sbv")
@@ -123,7 +135,210 @@ def serve_gp(argv=None):
                          "fitted params, so only --dataset synthetic")
     ap.add_argument("--stream-chunk", type=int, default=None,
                     help="rows per streaming-index pass (with --train-store)")
-    args = ap.parse_args(argv)
+    return ap
+
+
+# -- multi-host serve launch ------------------------------------------------
+
+
+def _spawn_serve_hosts(args) -> dict:
+    """Parent mode: launch K rank copies of ``serve gp`` and merge results.
+
+    The parent never touches jax.distributed — it only picks a
+    coordinator port, babysits the rank processes, and merges their
+    ``--result-json`` files (mirrors ``fit_gp._spawn_hosts``)."""
+    import json
+    import os
+    import socket
+    import subprocess
+    import sys
+
+    from repro.multihost import ENV_COORD, ENV_NPROCS, ENV_RANK
+
+    if args.dataset != "synthetic" or args.train_store:
+        raise SystemExit("--distributed-hosts serves the in-core synthetic "
+                         "dataset (ranks regenerate it deterministically)")
+    if args.workers > 1 or args.outputs > 1:
+        raise SystemExit("--distributed-hosts is exclusive with --workers "
+                         "and --outputs (one device per rank)")
+
+    k = int(args.distributed_hosts)
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+
+    child_argv = [sys.executable, "-m", "repro.launch.serve", "gp",
+                  "--n-train", str(args.n_train),
+                  "--n-test", str(args.n_test),
+                  "--chunk", str(args.chunk),
+                  "--bs-pred", str(args.bs_pred),
+                  "--m-pred", str(args.m_pred),
+                  "--backend", args.backend, "--dtype", args.dtype,
+                  "--seed", str(args.seed),
+                  "--requests", str(args.requests),
+                  "--replicas", str(max(1, args.replicas)),
+                  "--routing", args.routing,
+                  "--scheduler", "continuous", "--slo", args.slo]
+    if args.precision:
+        child_argv += ["--precision", args.precision]
+    if args.buckets:
+        child_argv += ["--buckets", str(args.buckets)]
+    if args.spill_points is not None:
+        child_argv += ["--spill-points", str(args.spill_points)]
+    if args.result_json:
+        child_argv += ["--result-json", args.result_json]
+
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH",
+                   os.path.dirname(os.path.dirname(os.path.dirname(
+                       os.path.abspath(__file__)))))
+    procs = []
+    for r in range(k):
+        e = dict(env)
+        e[ENV_RANK] = str(r)
+        e[ENV_NPROCS] = str(k)
+        e[ENV_COORD] = f"127.0.0.1:{port}"
+        procs.append(subprocess.Popen(child_argv, env=e,
+                                      stdout=subprocess.PIPE,
+                                      stderr=subprocess.STDOUT))
+    failed = False
+    for r, p in enumerate(procs):
+        out, _ = p.communicate(timeout=3600)
+        for line in out.decode(errors="replace").splitlines():
+            print(f"[rank {r}] {line}")
+        if p.returncode != 0:
+            print(f"[serve-gp] rank {r} exited with {p.returncode}")
+            failed = True
+    if failed:
+        raise SystemExit("multi-host serve failed — see rank logs above")
+
+    merged = {"n_hosts": k}
+    if args.result_json:
+        ranks = []
+        for r in range(k):
+            with open(f"{args.result_json}.rank{r}") as f:
+                ranks.append(json.load(f))
+        merged = {
+            "n_hosts": k,
+            "n_requests": sum(rk["n_requests"] for rk in ranks),
+            "n_points": sum(rk["n_points"] for rk in ranks),
+            "multihost_parity_max": max(rk["multihost_parity_max"]
+                                        for rk in ranks),
+            "served_parity_max": max(rk["served_parity_max"]
+                                     for rk in ranks),
+            "ranks": ranks,
+        }
+        with open(args.result_json, "w") as f:
+            json.dump(merged, f, indent=1)
+        print(f"[serve-gp] merged {k} rank results -> {args.result_json} "
+              f"(multihost parity={merged['multihost_parity_max']:.3g}, "
+              f"served parity={merged['served_parity_max']:.3g})")
+    return merged
+
+
+def _serve_rank(ctx, args, params, x, y, x_test, cfg) -> dict:
+    """Child mode: one rank of the multi-host serve plane.
+
+    Each rank fronts its local replicas with a router and serves the
+    slice of the request stream whose rendezvous owner it is (zero
+    coordination — every rank computes the same ownership table from the
+    request index). The collective part follows: every rank runs
+    ``predict_sbv(multihost=ctx)`` over the FULL test set (blocks
+    sharded by owner, one allreduce merge) and checks it against its own
+    serial ``predict_sbv`` — the cross-host prediction parity probe."""
+    import json
+
+    from repro.core.predict import predict_sbv
+    from repro.serving import GPServer, ReplicaRouter
+    from repro.serving.router import rendezvous_rank
+
+    servers = [GPServer(params, x, y, cfg)]
+    servers += [GPServer(params, x, y, cfg, index=servers[0].index)
+                for _ in range(max(1, args.replicas) - 1)]
+    router = ReplicaRouter(servers, routing=args.routing,
+                           spill_points=args.spill_points, seed=args.seed)
+
+    bounds = np.linspace(0, args.n_test, args.requests + 1).astype(int)
+    spans = [(a, b) for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+    owned = [i for i in range(len(spans))
+             if rendezvous_rank(("req", i), ctx.size,
+                                salt=args.seed) == ctx.rank]
+    with router:
+        router.warmup()
+        t0 = time.time()
+        futs = {i: router.submit(x_test[spans[i][0]:spans[i][1]],
+                                 slo=args.slo) for i in owned}
+        served = {i: f.result() for i, f in futs.items()}
+        dt = time.time() - t0
+
+    dtype = np.float32 if args.dtype == "f32" else np.float64
+    kw = dict(bs_pred=args.bs_pred, m_pred=args.m_pred, seed=args.seed,
+              n_sims=2, chunk_size=args.chunk, backend=args.backend,
+              dtype=dtype, n_buckets=args.buckets, precision=args.precision)
+    t0 = time.time()
+    mh = predict_sbv(params, x, y, x_test, multihost=ctx, **kw)
+    t_mh = time.time() - t0
+    serial = predict_sbv(params, x, y, x_test, **kw)
+    parity = max(
+        float(np.abs(mh.mean - serial.mean).max()),
+        float(np.abs(mh.var - serial.var).max()),
+        float(np.abs(mh.sim_mean - serial.sim_mean).max()),
+    )
+    # Scheduler-mode replicas pack with the base seed, so each served
+    # request must reproduce ITS OWN lone predict_sbv call under any
+    # routing (the 1e-12 parity contract); probe a bounded sample.
+    served_err = 0.0
+    for i in owned[:4]:
+        a, b = spans[i]
+        ref = predict_sbv(params, x, y, x_test[a:b], **kw)
+        served_err = max(
+            served_err,
+            float(np.abs(np.asarray(served[i].mean) - ref.mean).max()),
+            float(np.abs(np.asarray(served[i].var) - ref.var).max()))
+
+    rs = router.stats.summary()
+    out = {
+        "rank": ctx.rank, "n_hosts": ctx.size,
+        "n_requests": len(owned),
+        "n_points": int(sum(spans[i][1] - spans[i][0] for i in owned)),
+        "serve_s": dt, "multihost_predict_s": t_mh,
+        "multihost_parity_max": parity,
+        "served_parity_max": served_err,
+        "affinity_hit_rate": rs["affinity_hit_rate"],
+        "replica_requests": rs["replica_requests"],
+        "total_compiled_shapes": router.summary()["total_compiled_shapes"],
+    }
+    print(f"[serve-gp] rank {ctx.rank}/{ctx.size}: served "
+          f"{out['n_requests']}/{len(spans)} requests "
+          f"({out['n_points']} pts) in {dt:.2f}s over "
+          f"{len(servers)} replicas ({args.routing}); multihost predict "
+          f"{t_mh:.2f}s parity={parity:.3g} served parity={served_err:.3g}")
+    if args.result_json:
+        with open(f"{args.result_json}.rank{ctx.rank}", "w") as f:
+            json.dump(out, f, indent=1)
+    ctx.shutdown()
+    return out
+
+
+def serve_gp(argv=None):
+    """Persistent micro-batching SBV prediction service.
+
+    The test set is split into ``--requests`` asynchronous requests that
+    are submitted concurrently; the server coalesces them into padded
+    micro-batches and runs each through the double-buffered chunk
+    pipeline. ``--workers k`` shards every chunk's prediction blocks over
+    a k-device mesh (``distributed_predict``); the scatter stays
+    host-side. ``--pipeline sync`` falls back to the strictly serial
+    chunk loop (the pre-server behavior), and ``--compare`` races both
+    on the same workload. ``--replicas N`` serves through the
+    compile-cache-affinity ``ReplicaRouter``."""
+    # Rank processes must connect BEFORE anything initializes the JAX
+    # backend (repro.multihost imports jax lazily, so this is safe).
+    from repro.multihost import MultihostContext
+
+    ctx = MultihostContext.from_env()
+    args = _gp_parser().parse_args(argv)
     if args.tuning_record:
         from repro.tuning import as_record
 
@@ -141,13 +356,21 @@ def serve_gp(argv=None):
               f"stream-chunk={args.stream_chunk}")
     if args.backend is None:
         args.backend = "ref"
+    if ctx is None and args.distributed_hosts and args.distributed_hosts > 1:
+        return _spawn_serve_hosts(args)
+    if (args.replicas > 1 or ctx is not None) \
+            and args.scheduler != "continuous":
+        print("[serve-gp] replica routing requires the continuous "
+              "scheduler; enabling it")
+        args.scheduler = "continuous"
     dtype = np.float32 if args.dtype == "f32" else np.float64
 
     from repro.data.gp_sim import paper_synthetic
     from repro.launch.fit_gp import load_dataset
     from repro.serving import (
         BatchingPolicy, GPServer, GPServerConfig, PipelineConfig,
-        SchedulerPolicy, predict_pipelined, predict_synchronous,
+        ReplicaRouter, SchedulerPolicy, predict_pipelined,
+        predict_synchronous,
     )
 
     if args.outputs > 1 and (args.train_store or args.dataset == "synthetic"):
@@ -204,21 +427,30 @@ def serve_gp(argv=None):
         pipelined=args.pipeline == "double",
         seed=args.seed,
     )
+    if ctx is not None:
+        return _serve_rank(ctx, args, params, x, y, x_test, cfg)
 
     t0 = time.time()
     server = GPServer(params, x, y, cfg, mesh=mesh)
+    replicas = [server]
+    replicas += [GPServer(params, x, y, cfg, mesh=mesh, index=server.index)
+                 for _ in range(args.replicas - 1)]
     n_train = x.n_rows if args.train_store else len(y)
-    print(f"[serve-gp] train index over {n_train} pts: {time.time()-t0:.2f}s")
+    print(f"[serve-gp] train index over {n_train} pts "
+          f"(x{len(replicas)} replicas): {time.time()-t0:.2f}s")
+    front = server if args.replicas == 1 else ReplicaRouter(
+        replicas, routing=args.routing, spill_points=args.spill_points,
+        seed=args.seed)
 
-    with server:
+    with front:
         t0 = time.time()
-        server.warmup()
+        front.warmup()
         print(f"[serve-gp] warmup (compile): {time.time()-t0:.2f}s")
 
         # Concurrent request stream: near-equal splits of the test set.
         bounds = np.linspace(0, args.n_test, args.requests + 1).astype(int)
         t0 = time.time()
-        futs = [server.submit(x_test[a:b], slo=args.slo)
+        futs = [front.submit(x_test[a:b], slo=args.slo)
                 for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
         results = [f.result() for f in futs]
         dt = time.time() - t0
@@ -226,9 +458,9 @@ def serve_gp(argv=None):
         if server.n_outputs > 1:
             # Exercise the per-request output mask: a masked request's
             # result carries just the requested columns.
-            fut = server.submit(x_test[:min(64, args.n_test)], slo=args.slo,
-                                outputs=[server.n_outputs - 1])
-            server.flush()
+            fut = front.submit(x_test[:min(64, args.n_test)], slo=args.slo,
+                               outputs=[server.n_outputs - 1])
+            front.flush()
             masked = fut.result()
             assert masked.mean.shape[1] == 1, masked.mean.shape
             print(f"[serve-gp] {server.n_outputs}-output model; masked "
@@ -252,6 +484,15 @@ def serve_gp(argv=None):
           f"p95={stats['latency_p95_s']*1e3:.1f}ms "
           f"compiled-shapes={stats['n_compiled_shapes']} "
           f"padding-occupancy={stats['padding_occupancy']:.3f}")
+    if args.replicas > 1:
+        rsum = front.summary()
+        print(f"[serve-gp] router: replicas={args.replicas} "
+              f"routing={args.routing} "
+              f"affinity-hit={rsum['affinity_hit_rate']:.2f} "
+              f"spill-rate={rsum['spill_rate']:.2f} "
+              f"requests={rsum['replica_requests']} "
+              f"shapes={[r['n_compiled_shapes'] for r in rsum['replicas']]} "
+              f"(total {rsum['total_compiled_shapes']})")
     if args.scheduler == "continuous":
         per_cls = " ".join(
             f"{name}: n={c['n']} p50={c['latency_p50_s']*1e3:.1f}ms "
@@ -262,6 +503,18 @@ def serve_gp(argv=None):
               f"rejected={stats['n_rejected']} "
               f"cancelled={stats['n_cancelled']}")
     assert np.all(np.isfinite(mean)) and np.all(var > 0)
+
+    if args.result_json:
+        import json
+
+        out = {"n_test": args.n_test, "n_requests": len(futs),
+               "elapsed_s": dt, "points_per_s": args.n_test / dt,
+               "server": {k: v for k, v in stats.items()
+                          if isinstance(v, (int, float, str, bool))}}
+        if args.replicas > 1:
+            out["router"] = front.summary()
+        with open(args.result_json, "w") as f:
+            json.dump(out, f, indent=1)
 
     if args.compare:
         from repro.core.predict import predict_sbv
@@ -308,6 +561,17 @@ def main(argv=None):
     argv = list(sys.argv[1:]) if argv is None else list(argv)
     if argv and argv[0] == "gp":
         return serve_gp(argv[1:])
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.launch.train import make_mesh
+    from repro.models.model import init_params, prefill_step, serve_step
+    from repro.sharding.compat import set_mesh
+    from repro.sharding.rules import cache_specs, param_specs, tp_size
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true")

@@ -48,6 +48,21 @@ def _flat(key: str) -> str:
     return key.replace("/", ".")
 
 
+def partition_blocks(n_blocks: int, size: int) -> list:
+    """Contiguous ``[lo, hi)`` block spans per rank (``np.array_split``
+    semantics: the first ``n_blocks % size`` ranks carry one extra).
+    Every rank computes the identical table from the identical packed
+    chunk, so block ownership in the multi-host predict path
+    (``predict_sbv(multihost=)``) needs zero coordination."""
+    base, extra = divmod(int(n_blocks), int(size))
+    spans, lo = [], 0
+    for r in range(int(size)):
+        hi = lo + base + (1 if r < extra else 0)
+        spans.append((lo, hi))
+        lo = hi
+    return spans
+
+
 class LoopbackComm:
     """Single-process implementation of the host-comm interface.
 

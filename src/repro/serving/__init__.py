@@ -5,6 +5,8 @@
 #   pipeline.py  — double-buffered chunk engine (pack k+1 || compute k),
 #                  per-request pack protocol, spool-backed result sink
 #   server.py    — GPServer: owns the train index + compiled predict program
+#   router.py    — ReplicaRouter: N replicas behind one submit(), routed by
+#                  compile-cache shape affinity (rendezvous hashing + spill)
 #   telemetry.py — per-request / per-SLO-class latency + occupancy stats
 from .batching import (
     AdmissionQueueFull, ArrivalWindow, BatchingPolicy, MicroBatcher,
@@ -13,6 +15,9 @@ from .batching import (
 from .pipeline import (
     PipelineConfig, SpoolResultSink, pack_scheduled, predict_pipelined,
     predict_synchronous, request_chunk_bounds, run_chunk_stream, tuned_config,
+)
+from .router import (
+    ReplicaRouter, RouterStats, rendezvous_rank, request_shape_signature,
 )
 from .scheduler import ContinuousScheduler, ScheduledChunk
 from .server import GPServer, GPServerConfig, ServeResult
@@ -24,6 +29,8 @@ __all__ = [
     "PipelineConfig", "SpoolResultSink", "pack_scheduled",
     "predict_pipelined", "predict_synchronous", "request_chunk_bounds",
     "run_chunk_stream", "tuned_config",
+    "ReplicaRouter", "RouterStats", "rendezvous_rank",
+    "request_shape_signature",
     "ContinuousScheduler", "ScheduledChunk",
     "GPServer", "GPServerConfig", "ServeResult",
     "RequestTrace", "ServerStats",

@@ -190,14 +190,18 @@ def make_chunk_compute(params: KernelParams, cfg: PipelineConfig, mesh=None,
 
 def _record_pieces(stats: ServerStats | None, pieces) -> None:
     """Per-piece shape + padding-occupancy telemetry for ONE chunk (the
-    chunk counter advances once however many bucket pieces it split into)."""
+    chunk counter advances once however many bucket pieces it split into).
+    One key is recorded PER PIECE, tagged with the piece's precision tier
+    — each bucket shape at each dtype is its own compiled program, and
+    the affinity router reads this set as the warm-cache signal."""
     if stats is None:
         return
-    from repro.core.buckets import prediction_work
+    from repro.core.buckets import dtype_tier, prediction_work
 
     for i, (piece, _, _) in enumerate(pieces):
         stats.record_chunk_shape(piece.n_blocks, piece.bs_pred, piece.m_pred,
-                                 count_chunk=i == 0)
+                                 count_chunk=i == 0,
+                                 tier=dtype_tier(piece.q_x.dtype))
     stats.record_occupancy(*prediction_work([p for p, _, _ in pieces]))
 
 

@@ -227,6 +227,20 @@ class ContinuousScheduler:
         with self._cond:
             return self._queued_points
 
+    @property
+    def outstanding_points(self) -> int:
+        """Queued + admitted-but-unlanded query points — the router's
+        least-outstanding-work spill signal. ``_active`` (partially
+        scheduled) and ``_inflight`` (fully scheduled, not complete)
+        entries are disjoint by construction, so each is summed once."""
+        with self._cond:
+            total = self._queued_points
+            entries = [e for lst in self._active.values() for e in lst]
+            entries.extend(self._inflight)
+            for e in entries:
+                total += sum(stop - start for start, stop in e.bounds[e.done:])
+            return total
+
     def drain_pending(self) -> list[ServeRequest]:
         """Remove and return still-queued requests (post-close cleanup:
         the server fails their futures instead of stranding them)."""

@@ -261,6 +261,16 @@ class GPServer:
             self._batcher.put(req)
         return req.future
 
+    @property
+    def outstanding_points(self) -> int:
+        """Queued + admitted-but-unfinished query points on this server —
+        the router's least-outstanding-work signal. Drain mode has no
+        per-chunk accounting; it reports 0 (the router refuses drain-mode
+        replicas anyway — see ``serving/router.py``)."""
+        if self._sched is not None:
+            return self._sched.outstanding_points
+        return 0
+
     def cancel(self, future: Future) -> bool:
         """Cancel an in-flight request; effective at the next chunk
         boundary in scheduler mode (queued-or-running both work), queued

@@ -61,7 +61,7 @@ class ServerStats:
         self.batch_points: deque[int] = deque(maxlen=window)   # pts/batch
         self.latencies_s: deque[float] = deque(maxlen=window)
         self.queue_waits_s: deque[float] = deque(maxlen=window)
-        self.compiled_shapes: set[tuple] = set()  # (bc, bs, m) seen by jit
+        self.compiled_shapes: set[tuple] = set()  # (bc, bs, m, tier) seen by jit
         self.true_flops = 0.0    # padding-occupancy accounting: useful work
         self.padded_flops = 0.0  # ... vs what the padded shapes execute
         # Continuous-scheduler signals (scheduler.py): per-SLO-class
@@ -82,13 +82,53 @@ class ServerStats:
             self.batch_points.append(n_points)
 
     def record_chunk_shape(self, bc: int, bs: int, m: int,
-                           count_chunk: bool = True) -> None:
+                           count_chunk: bool = True,
+                           tier: str = "f64") -> None:
         """Track one device-program shape; ``count_chunk=False`` records a
         further bucket piece of an already-counted chunk, so ``n_chunks``
-        keeps meaning chunks processed, not pieces dispatched."""
+        keeps meaning chunks processed, not pieces dispatched. The key
+        carries the precision ``tier`` because the jit cache does too:
+        the same ``(bc, bs, m)`` at two dtypes is two compiled programs,
+        and the affinity router's signal must not collapse them."""
         with self._lock:
             self.n_chunks += 1 if count_chunk else 0
-            self.compiled_shapes.add((bc, bs, m))
+            self.compiled_shapes.add((bc, bs, m, tier))
+
+    def compiled_shape_keys(self) -> set[tuple]:
+        """Snapshot of the ``(bc, bs, m, tier)`` keys seen so far (a copy;
+        safe to iterate while the server keeps recording)."""
+        with self._lock:
+            return set(self.compiled_shapes)
+
+    def reset(self, preserve_shapes: bool = True) -> None:
+        """Zero every counter and window and restart the qps clock.
+
+        ``compiled_shapes`` is kept by default: the process-level jit
+        cache it mirrors survives a stats reset, so dropping the keys
+        would fake recompiles that will never happen. Pass
+        ``preserve_shapes=False`` to clear it too (fresh-server
+        accounting in benchmarks)."""
+        with self._lock:
+            self.n_requests = 0
+            self.n_points = 0
+            self.n_batches = 0
+            self.n_chunks = 0
+            self.batch_sizes.clear()
+            self.batch_points.clear()
+            self.latencies_s.clear()
+            self.queue_waits_s.clear()
+            if not preserve_shapes:
+                self.compiled_shapes.clear()
+            self.true_flops = 0.0
+            self.padded_flops = 0.0
+            self.class_latencies = {}
+            self.class_counts = {}
+            self.n_cancelled = 0
+            self.n_preempted = 0
+            self.n_rejected = 0
+            self.queue_depth_points = 0
+            self.queue_depth_peak = 0
+            self.t_start = now()
 
     def record_occupancy(self, true_flops: float, padded_flops: float) -> None:
         """Accumulate the padding-occupancy ratio's numerator/denominator

@@ -139,6 +139,37 @@ def test_loopback_fit_is_bitwise_serial(tmp_path):
                           np.asarray(mh.params.beta))
 
 
+def test_partition_blocks_spans():
+    from repro.multihost import partition_blocks
+
+    assert partition_blocks(10, 3) == [(0, 4), (4, 7), (7, 10)]
+    assert partition_blocks(2, 4) == [(0, 1), (1, 2), (2, 2), (2, 2)]
+    for n, k in ((1, 1), (17, 5), (64, 8)):
+        spans = partition_blocks(n, k)
+        assert spans[0][0] == 0 and spans[-1][1] == n
+        assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+        widths = [hi - lo for lo, hi in spans]
+        assert max(widths) - min(widths) <= 1
+
+
+def test_loopback_predict_is_bitwise_serial():
+    """``predict_sbv(multihost=LoopbackComm())`` owns every block span,
+    so the sharded path must reproduce the plain predict BITWISE (the
+    full-span eps slice is the identity and allreduce is a copy)."""
+    from repro.core.predict import predict_sbv
+    from repro.multihost import LoopbackComm
+
+    x, y, params = paper_synthetic(seed=0, n=400, d=3)
+    rng = np.random.default_rng(1)
+    xq = rng.uniform(size=(111, 3))
+    kw = dict(bs_pred=8, m_pred=24, seed=3, n_sims=3, chunk_size=64)
+    ref = predict_sbv(params, x, y, xq, **kw)
+    mh = predict_sbv(params, x, y, xq, multihost=LoopbackComm(), **kw)
+    for f in ("mean", "var", "sim_mean", "ci_low", "ci_high"):
+        assert np.array_equal(np.asarray(getattr(ref, f)),
+                              np.asarray(getattr(mh, f))), f
+
+
 # -- real rank subprocesses -------------------------------------------------
 
 

@@ -224,11 +224,80 @@ def test_store_backed_multi_fit_routes_to_streaming(multi_problem, cfg):
 def test_multi_fit_rejects_unsupported_paths(multi_problem, cfg):
     x, y = multi_problem
     with pytest.raises(NotImplementedError):
-        fit_sbv(x, y, cfg, precision="f32")
-    with pytest.raises(NotImplementedError):
         fit_sbv(x, y, cfg, distributed=(None, "workers"))
     with pytest.raises(NotImplementedError):
         fit_sbv(x, y, cfg, stream_chunk=120, n_buckets=2)
+
+
+# -- mixed-precision multi fits (ladder is cast-only on packed dtypes) -----
+
+
+def test_multi_precision_nll_within_tier_budget(multi_problem, cfg, fitted):
+    """``cast_packed`` composes with multi-RHS columns directly: at every
+    tier, each output's multi-batched ll equals the single-output ll of
+    the SAME tier-cast data (the batching adds only ulp-class noise, no
+    new error class), and the widest narrow tier stays inside its
+    documented budget vs f64. (The f32 rung's 1e-6 budget is what the
+    single-output PROBE enforces by demotion — the cast-only multi path
+    inherits the raw cast error, identical to the single-output raw cast
+    error, which is the composition claim.)"""
+    from repro.core.buckets import _TIER_BUDGETS, cast_packed
+
+    x, y = multi_problem
+    params = fitted.params
+    packed, _ = preprocess(x, y, np.asarray(params.beta), cfg)
+    for tier in ("f32", "bf16"):
+        ll_multi = np.asarray(multi_loglik(params, cast_packed(packed, tier)),
+                              dtype=np.float64)
+        for j in range(y.shape[1]):
+            pk_j = preprocess(x, y[:, j], np.asarray(params.beta), cfg)[0]
+            ll_j = float(packed_loglik(params.output_params(j),
+                                       cast_packed(pk_j, tier)))
+            rel = abs(ll_multi[j] - ll_j) / max(1.0, abs(ll_j))
+            # ulp-class batching noise at the tier's accumulation width
+            assert rel <= {"f32": 1e-5, "bf16": 5e-5}[tier], (tier, j, rel)
+    ref = np.asarray(multi_loglik(params, cast_packed(packed, "f64")),
+                     dtype=np.float64)
+    got = np.asarray(multi_loglik(params, cast_packed(packed, "bf16")),
+                     dtype=np.float64)
+    rel = np.max(np.abs(got - ref) / np.maximum(1.0, np.abs(ref)))
+    assert rel <= _TIER_BUDGETS["bf16"], rel
+
+
+def test_multi_precision_fit_parity_vs_f64(multi_problem, cfg):
+    """End-to-end f32 multi fit lands within the tier's budget of the
+    f64 fit: identical structure passes and step counts, so the only
+    divergence is the cast — compare the fits' pooled objectives at
+    their own optima (the ladder's deployed-quality contract)."""
+    x, y = multi_problem
+    res64 = fit_sbv(x, y, cfg, inner_steps=4, outer_rounds=1)
+    res32 = fit_sbv(x, y, cfg, inner_steps=4, outer_rounds=1,
+                    precision="f32")
+    nll64 = res64.history[-1][2]
+    nll32 = res32.history[-1][2]
+    assert abs(nll32 - nll64) / max(1.0, abs(nll64)) <= 1e-4
+    for f in ("log_beta", "log_tau2", "log_sigma2"):
+        a = np.asarray(getattr(res32.params, f), dtype=np.float64)
+        b = np.asarray(getattr(res64.params, f), dtype=np.float64)
+        assert np.allclose(a, b, rtol=0, atol=1e-2), f
+
+
+def test_multi_precision_bucketed_and_streaming_paths(multi_problem, cfg):
+    """Precision composes with the bucketed in-core multi fit and the
+    streaming multi fit (uniform cast before spooling, recorded in
+    stream_stats)."""
+    x, y = multi_problem
+    res_b = fit_sbv(x, y, cfg, inner_steps=2, outer_rounds=1,
+                    precision="f32", n_buckets=2)
+    res_s = fit_sbv(x, y, cfg, inner_steps=2, outer_rounds=1,
+                    precision="f32", stream_chunk=120)
+    assert res_s.stream_stats["precision"] == "f32"
+    res64 = fit_sbv(x, y, cfg, inner_steps=2, outer_rounds=1)
+    for res in (res_b, res_s):
+        for f in ("log_beta", "log_tau2"):
+            a = np.asarray(getattr(res.params, f), dtype=np.float64)
+            b = np.asarray(getattr(res64.params, f), dtype=np.float64)
+            assert np.allclose(a, b, rtol=0, atol=1e-2), f
 
 
 # -- parameter container + checkpoint round-trip ---------------------------

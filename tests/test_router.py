@@ -1,0 +1,364 @@
+"""Multi-replica prediction router (docs/serving.md "Multi-replica
+routing").
+
+Contracts (ISSUE tentpole):
+(a) routing NEVER changes a result — under any policy every request
+    matches its own lone ``predict_sbv`` call to 1e-12 (scheduler-mode
+    replicas pack with the base seed);
+(b) shape affinity — equal-size requests share a signature and land on
+    one rendezvous-preferred replica, so only that replica's compile
+    cache grows;
+(c) rendezvous hashing is deterministic across processes (keyed blake2b,
+    not the salted builtin ``hash``) and minimally disruptive: removing
+    a replica only remaps the signatures it owned;
+(d) saturation spills to the least-outstanding replica instead of
+    queueing behind the preferred one, and ``AdmissionQueueFull`` walks
+    the spill chain before re-raising;
+(e) the 2-rank subprocess serve drives the whole plane end-to-end:
+    local routers per rank + the collective ``predict_sbv(multihost=)``
+    probe vs serial <= 1e-8.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import predict_sbv
+from repro.data.gp_sim import paper_synthetic
+from repro.serving import (
+    AdmissionQueueFull, BatchingPolicy, GPServer, GPServerConfig,
+    PipelineConfig, ReplicaRouter, SchedulerPolicy, rendezvous_rank,
+    request_shape_signature,
+)
+
+pytestmark = pytest.mark.router
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def problem():
+    x, y, params = paper_synthetic(seed=0, n=400, d=4)
+    return params, x, y
+
+
+def _server_cfg(seed=3, queue_bound=None, **pipe_kw):
+    pipe_kw.setdefault("bs_pred", 8)
+    pipe_kw.setdefault("m_pred", 32)
+    pipe_kw.setdefault("chunk_size", 64)
+    return GPServerConfig(
+        pipeline=PipelineConfig(**pipe_kw),
+        policy=BatchingPolicy(max_points=100_000, max_wait_s=30.0),
+        scheduler=SchedulerPolicy(queue_bound=queue_bound),
+        seed=seed,
+    )
+
+
+def _make_replicas(problem, n, cfg=None):
+    params, x, y = problem
+    cfg = cfg or _server_cfg()
+    reps = [GPServer(params, x, y, cfg)]
+    reps += [GPServer(params, x, y, cfg, index=reps[0].index)
+             for _ in range(n - 1)]
+    return reps
+
+
+# -- rendezvous hashing -----------------------------------------------------
+
+
+def test_rendezvous_deterministic_and_spread():
+    sigs = [((bc, 8, 32, "f64"),) for bc in range(1, 65)]
+    owners = [rendezvous_rank(s, 4) for s in sigs]
+    assert owners == [rendezvous_rank(s, 4) for s in sigs]  # pure
+    assert set(owners) == {0, 1, 2, 3}  # every replica owns something
+    # a different salt is a different (deterministic) assignment
+    assert owners != [rendezvous_rank(s, 4, salt=1) for s in sigs]
+
+
+def test_rendezvous_minimal_disruption_on_replica_removal():
+    """HRW property: dropping the last replica only remaps signatures it
+    owned — everything else keeps its owner (warm caches survive)."""
+    sigs = [((bc, bs, m, "f64"),) for bc in range(1, 33)
+            for bs, m in ((8, 32), (16, 64))]
+    before = {s: rendezvous_rank(s, 4) for s in sigs}
+    after = {s: rendezvous_rank(s, 3) for s in sigs}
+    for s in sigs:
+        if before[s] < 3:
+            assert after[s] == before[s]
+
+
+def test_rendezvous_rejects_zero_replicas():
+    with pytest.raises(ValueError):
+        rendezvous_rank(("x",), 0)
+
+
+# -- shape signatures -------------------------------------------------------
+
+
+def test_signature_equal_sizes_share_equal_keys():
+    cfg = PipelineConfig(bs_pred=8, m_pred=32, chunk_size=512)
+    assert request_shape_signature(100, cfg) == request_shape_signature(100, cfg)
+    # same padded chunk profile => same signature even if n differs
+    # (100//8=12 and 104//8=13 blocks both round up to 16)
+    sig_a = request_shape_signature(100, cfg)
+    sig_b = request_shape_signature(104, cfg)
+    assert sig_a == sig_b
+    # a much larger request realizes a different chunk profile
+    assert request_shape_signature(3000, cfg) != sig_a
+
+
+def test_signature_tracks_config_knobs():
+    base = PipelineConfig(bs_pred=8, m_pred=32, chunk_size=64)
+    assert request_shape_signature(100, base) != request_shape_signature(
+        100, PipelineConfig(bs_pred=8, m_pred=48, chunk_size=64))
+    assert request_shape_signature(100, base) != request_shape_signature(
+        100, PipelineConfig(bs_pred=8, m_pred=32, chunk_size=64,
+                            precision="f32"))
+    bucketed = PipelineConfig(bs_pred=8, m_pred=32, chunk_size=64,
+                              n_buckets=2)
+    sig = request_shape_signature(100, bucketed)
+    assert any(k[0] == "buckets" for k in sig)
+
+
+# -- construction contracts -------------------------------------------------
+
+
+def test_router_refuses_drain_mode_replicas(problem):
+    params, x, y = problem
+    cfg = GPServerConfig(pipeline=PipelineConfig(bs_pred=8, m_pred=32,
+                                                 chunk_size=64),
+                         scheduler=None, seed=3)
+    with pytest.raises(ValueError, match="drain"):
+        ReplicaRouter([GPServer(params, x, y, cfg)])
+
+
+def test_router_refuses_mismatched_configs(problem):
+    params, x, y = problem
+    a = GPServer(params, x, y, _server_cfg(seed=3))
+    b = GPServer(params, x, y, _server_cfg(seed=4), index=a.index)
+    with pytest.raises(ValueError, match="disagree"):
+        ReplicaRouter([a, b])
+    c = GPServer(params, x, y, _server_cfg(m_pred=48), index=a.index)
+    with pytest.raises(ValueError, match="disagree"):
+        ReplicaRouter([a, c])
+
+
+def test_router_rejects_unknown_policy_and_empty(problem):
+    with pytest.raises(ValueError):
+        ReplicaRouter([])
+    reps = _make_replicas(problem, 1)
+    with pytest.raises(ValueError):
+        ReplicaRouter(reps, routing="sticky")
+
+
+# -- routing policy (stub replicas: no numerics) ----------------------------
+
+
+class _StubReplica:
+    """Matches the slice of the GPServer surface the router touches."""
+
+    def __init__(self, outstanding=0, reject=False):
+        self.outstanding_points = outstanding
+        self.reject = reject
+        self.submitted = []
+
+    def submit(self, x, slo="interactive", outputs=None):
+        if self.reject:
+            raise AdmissionQueueFull("full")
+        self.submitted.append(np.asarray(x).shape[0])
+        return "fut"
+
+
+def test_affinity_prefers_rendezvous_owner():
+    reps = [_StubReplica() for _ in range(3)]
+    r = ReplicaRouter(reps, routing="affinity")
+    n = 100
+    pref = r.preferred_replica(n)
+    for _ in range(5):
+        r.submit(np.zeros((n, 3)))
+    assert len(reps[pref].submitted) == 5
+    s = r.stats.summary()
+    assert s["affinity_hit_rate"] == 1.0 and s["n_spilled"] == 0
+
+
+def test_spill_to_least_outstanding_past_threshold():
+    reps = [_StubReplica(outstanding=0) for _ in range(3)]
+    r = ReplicaRouter(reps, routing="affinity", spill_points=500)
+    pref = r.preferred_replica(64)
+    reps[pref].outstanding_points = 1000  # saturate the preferred replica
+    r.submit(np.zeros((64, 3)))
+    landed = [i for i, rep in enumerate(reps) if rep.submitted]
+    assert landed != [pref]
+    s = r.stats.summary()
+    assert s["n_spilled"] == 1 and s["affinity_hits"] == 0
+    # under the threshold, affinity sticks even when others are idle
+    reps[pref].outstanding_points = 100
+    r.submit(np.zeros((64, 3)))
+    assert len(reps[pref].submitted) == 1
+
+
+def test_no_spill_when_everyone_is_as_loaded():
+    reps = [_StubReplica(outstanding=1000) for _ in range(3)]
+    r = ReplicaRouter(reps, routing="affinity", spill_points=500)
+    pref = r.preferred_replica(64)
+    r.submit(np.zeros((64, 3)))  # spilling elsewhere would not help
+    assert len(reps[pref].submitted) == 1
+
+
+def test_admission_full_walks_spill_chain_then_reraises():
+    reps = [_StubReplica(reject=True) for _ in range(3)]
+    pref = ReplicaRouter(reps, routing="affinity").preferred_replica(64)
+    reps[pref].reject = False
+    r = ReplicaRouter(reps, routing="affinity")
+    r.submit(np.zeros((64, 3)))  # preferred accepts
+    reps[pref].reject = True
+    with pytest.raises(AdmissionQueueFull):
+        r.submit(np.zeros((64, 3)))  # every replica rejected
+    # one healthy spare catches the spill
+    reps[(pref + 1) % 3].reject = False
+    r.submit(np.zeros((64, 3)))
+    assert len(reps[(pref + 1) % 3].submitted) == 1
+
+
+def test_round_robin_rotates_and_random_is_seeded():
+    reps = [_StubReplica() for _ in range(3)]
+    r = ReplicaRouter(reps, routing="round_robin")
+    for _ in range(6):
+        r.submit(np.zeros((10, 2)))
+    assert [len(rep.submitted) for rep in reps] == [2, 2, 2]
+
+    picks = []
+    for seed in (7, 7, 8):
+        reps = [_StubReplica() for _ in range(3)]
+        r = ReplicaRouter(reps, routing="random", seed=seed)
+        for _ in range(16):
+            r.submit(np.zeros((10, 2)))
+        picks.append(tuple(len(rep.submitted) for rep in reps))
+    assert picks[0] == picks[1]  # same seed, same spray
+
+
+def test_router_stats_counters():
+    reps = [_StubReplica() for _ in range(2)]
+    r = ReplicaRouter(reps, routing="round_robin")
+    for n in (10, 20, 30):
+        r.submit(np.zeros((n, 2)))
+    s = r.stats.summary()
+    assert s["n_requests"] == 3 and s["n_points"] == 60
+    assert sum(s["replica_requests"]) == 3
+    assert sum(s["replica_points"]) == 60
+    assert 0.0 <= s["affinity_hit_rate"] <= 1.0
+
+
+# -- parity: routing never changes a result ---------------------------------
+
+
+@pytest.mark.parametrize("routing", ["affinity", "random", "round_robin"])
+def test_routed_requests_match_lone_predict_sbv(problem, routing):
+    """THE tentpole contract: whatever replica a request lands on, the
+    result is its own ``predict_sbv(..., seed=cfg.seed)`` to 1e-12."""
+    params, x, y = problem
+    reps = _make_replicas(problem, 3)
+    rng = np.random.default_rng(5)
+    requests = [rng.uniform(size=(n, 4)) for n in (33, 70, 33, 12, 70, 1)]
+    router = ReplicaRouter(reps, routing=routing, seed=1)
+    with router:
+        futs = [router.submit(xq) for xq in requests]
+        router.flush()
+        results = [f.result(timeout=300) for f in futs]
+    for xq, res in zip(requests, results):
+        ref = predict_sbv(params, x, y, xq, bs_pred=8, m_pred=32, seed=3,
+                          chunk_size=64, n_sims=2)
+        np.testing.assert_allclose(res.mean, np.asarray(ref.mean),
+                                   rtol=0, atol=1e-12)
+        np.testing.assert_allclose(res.var, np.asarray(ref.var),
+                                   rtol=0, atol=1e-12)
+    # routing telemetry saw every request
+    assert router.stats.summary()["n_requests"] == len(requests)
+
+
+def test_affinity_colocates_and_random_sprays_shapes(problem):
+    """Affinity's point: one size class touches ONE replica's cache.
+    Submit one size class many times — affinity grows one replica's
+    compiled-shape set, round_robin grows all three."""
+    rng = np.random.default_rng(6)
+    requests = [rng.uniform(size=(64, 4)) for _ in range(9)]
+
+    def shapes_touched(routing):
+        reps = _make_replicas(problem, 3)
+        router = ReplicaRouter(reps, routing=routing, seed=0)
+        with router:
+            futs = [router.submit(xq) for xq in requests]
+            router.flush()
+            [f.result(timeout=300) for f in futs]
+        return [len(rep.stats.compiled_shape_keys()) for rep in reps]
+
+    aff = shapes_touched("affinity")
+    rr = shapes_touched("round_robin")
+    assert sum(1 for v in aff if v > 0) == 1  # one warm cache
+    assert sum(1 for v in rr if v > 0) == 3   # three cold-started caches
+    assert sum(aff) < sum(rr)
+
+
+def test_concurrent_submits_are_thread_safe(problem):
+    reps = _make_replicas(problem, 2)
+    router = ReplicaRouter(reps, routing="affinity", seed=0)
+    rng = np.random.default_rng(9)
+    requests = [rng.uniform(size=(24, 4)) for _ in range(12)]
+    futs = [None] * len(requests)
+    with router:
+        def worker(k):
+            futs[k] = router.submit(requests[k])
+
+        threads = [threading.Thread(target=worker, args=(k,))
+                   for k in range(len(requests))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        router.flush()
+        results = [f.result(timeout=300) for f in futs]
+    params, x, y = problem
+    for xq, res in zip(requests, results):
+        ref = predict_sbv(params, x, y, xq, bs_pred=8, m_pred=32, seed=3,
+                          chunk_size=64, n_sims=2)
+        np.testing.assert_allclose(res.mean, np.asarray(ref.mean),
+                                   rtol=0, atol=1e-12)
+    assert router.stats.summary()["n_requests"] == len(requests)
+
+
+# -- the multi-host serve plane (real rank subprocesses) --------------------
+
+
+def test_two_rank_serve_and_multihost_predict_parity(tmp_path):
+    """End-to-end over ``jax.distributed``: 2 rank processes each serve
+    their rendezvous-owned request slice through a local router, then
+    collectively run ``predict_sbv(multihost=)`` and compare against the
+    serial predict — the ISSUE gate: multihost parity <= 1e-8, served
+    per-request parity <= 1e-12."""
+    result = str(tmp_path / "serve.json")
+    cmd = [sys.executable, "-m", "repro.launch.serve", "gp",
+           "--n-train", "500", "--n-test", "600", "--chunk", "256",
+           "--bs-pred", "8", "--m-pred", "30", "--requests", "6",
+           "--distributed-hosts", "2", "--seed", "0",
+           "--result-json", result]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"distributed serve failed:\n{proc.stdout}\n{proc.stderr}")
+    with open(result) as f:
+        merged = json.load(f)
+    assert merged["n_hosts"] == 2
+    assert len(merged["ranks"]) == 2
+    # every request served exactly once across the ranks
+    assert merged["n_requests"] == 6
+    assert merged["n_points"] == 600
+    assert merged["multihost_parity_max"] <= 1e-8
+    assert merged["served_parity_max"] <= 1e-12
+    # both ranks took a share (rendezvous spreads 6 requests over 2)
+    assert all(rk["n_requests"] > 0 for rk in merged["ranks"])
